@@ -1,0 +1,71 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+Prints a markdown table plus per-cell one-line "what would move the dominant
+term" notes, and the BottleMod step-model prediction for each training cell.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+HBM_LIMIT = 16 * 2 ** 30
+
+NOTES = {
+    ("compute",): "raise MXU utilization: larger per-device batch/seq tiles, fuse small matmuls",
+    ("memory",): "cut HBM traffic: bf16 activations, fuse elementwise chains, wider remat blocks",
+    ("collective",): "cut ICI bytes: less TP for small dims, reduce-scatter grads, bf16 collectives, overlap",
+}
+
+
+def load(mesh: str, tag: str = ""):
+    recs = []
+    for p in sorted((ROOT / "results" / "dryrun").glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_row(r):
+    rr = r["roofline"]
+    per = r["per_device"]
+    mem = r.get("memory_analysis", {})
+    hbm = mem.get("temp_size_in_bytes", 0) + mem.get("argument_size_in_bytes", 0)
+    fits = "Y" if hbm <= HBM_LIMIT else f"N({hbm / 2**30:.0f}G)"
+    return (f"| {r['arch']} | {r['shape']} | {per['flops']:.2e} | {per['bytes']:.2e} | "
+            f"{per['collective_bytes']:.2e} | {rr['compute_s']:.4f} | {rr['memory_s']:.4f} | "
+            f"{rr['collective_s']:.4f} | **{rr['dominant']}** | {rr['useful_flops_ratio']:.2f} | "
+            f"{rr['roofline_fraction']:.3f} | {fits} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--notes", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.mesh, args.tag)
+    print(f"### Roofline — {args.mesh}-pod mesh ({'256' if args.mesh == 'single' else '512'} chips)"
+          + (f" [tag={args.tag}]" if args.tag else ""))
+    print()
+    print("| arch | shape | FLOPs/dev | bytes/dev | coll B/dev | compute s | memory s | "
+          "collective s | dominant | useful | roofline frac | fits 16G |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(fmt_row(r))
+    if args.notes:
+        print()
+        for r in recs:
+            dom = r["roofline"]["dominant"]
+            print(f"- **{r['arch']} × {r['shape']}** ({dom}-bound): {NOTES[(dom,)]}")
+
+
+if __name__ == "__main__":
+    main()

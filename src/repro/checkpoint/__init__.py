@@ -1,0 +1,3 @@
+from .store import CheckpointConfig, CheckpointManager
+
+__all__ = ["CheckpointConfig", "CheckpointManager"]

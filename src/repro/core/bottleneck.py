@@ -1,0 +1,82 @@
+"""Bottleneck analysis & what-if estimation — BottleMod Sect. 3.3 / Sect. 8.
+
+The progress solver already attributes every time interval to the limiting
+data input or resource (the piecewise-defined bottleneck function derived
+"from the discrete intersections of the task models' limiting functions",
+abstract).  This module aggregates those attributions across a workflow and
+quantifies the *potential performance gain* from overcoming a bottleneck —
+the paper's headline use case for schedulers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .ppoly import PPoly
+from .workflow import Workflow, WorkflowResult
+
+
+@dataclass
+class BottleneckShare:
+    process: str
+    kind: str        # "data" | "resource"
+    name: str
+    seconds: float
+    fraction: float  # of that process's runtime
+
+
+def bottleneck_report(wr: WorkflowResult) -> list[BottleneckShare]:
+    """Time each limiting factor holds a process back, sorted by share."""
+    out: list[BottleneckShare] = []
+    for pname, r in wr.results.items():
+        fin = r.finish_time if np.isfinite(r.finish_time) else max(
+            (s.t_end for s in r.segments if np.isfinite(s.t_end)), default=r.t_start)
+        total = max(fin - r.t_start, 1e-12)
+        acc: dict[tuple[str, str], float] = {}
+        for s in r.segments:
+            t1 = min(s.t_end, fin)
+            if t1 > s.t_start:
+                acc[(s.kind, s.name)] = acc.get((s.kind, s.name), 0.0) + (t1 - s.t_start)
+        for (kind, name), secs in acc.items():
+            out.append(BottleneckShare(pname, kind, name, secs, secs / total))
+    out.sort(key=lambda b: -b.seconds)
+    return out
+
+
+def whatif_scale_resource(wf: Workflow, proc: str, res: str, factor: float) -> WorkflowResult:
+    """Re-analyze the workflow with one resource allocation scaled.
+
+    This is the paper's "potential performance gain when the bottleneck is
+    resolved": because re-analysis is nearly free (Sect. 6), a scheduler can
+    simply try candidate allocations.
+    """
+    wf2 = _clone(wf)
+    wf2.resource_alloc[proc][res] = wf.resource_alloc[proc][res] * factor
+    return wf2.analyze()
+
+
+def potential_gains(wf: Workflow, base: WorkflowResult | None = None,
+                    factor: float = 2.0) -> list[tuple[str, str, float, float]]:
+    """For every (process, resource) pair: makespan if that allocation is
+    scaled by ``factor``.  Returns ``(process, resource, new_makespan,
+    gain_seconds)`` sorted by gain."""
+    base = base or wf.analyze()
+    out = []
+    for pname in wf.processes:
+        for res in wf.resource_alloc.get(pname, {}):
+            wr = whatif_scale_resource(wf, pname, res, factor)
+            out.append((pname, res, wr.makespan, base.makespan - wr.makespan))
+    out.sort(key=lambda x: -x[3])
+    return out
+
+
+def _clone(wf: Workflow) -> Workflow:
+    wf2 = Workflow()
+    wf2.processes = dict(wf.processes)
+    wf2.resource_alloc = {k: dict(v) for k, v in wf.resource_alloc.items()}
+    wf2.external_data = {k: dict(v) for k, v in wf.external_data.items()}
+    wf2.edges = list(wf.edges)
+    wf2.gates = {k: list(v) for k, v in wf.gates.items()}
+    return wf2

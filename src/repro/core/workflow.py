@@ -1,0 +1,134 @@
+"""Workflow composition — BottleMod Sect. 3.4.
+
+Processes are chained by using one process's output function ``O_m(P(t))`` as
+the data input function ``I_Dk(t)`` of a successor.  Any DAG of processes can
+be analyzed in topological order; cyclic dependency graphs are rejected (the
+paper's stated limitation).
+
+Two dependency styles are supported, matching the paper's evaluation:
+
+* ``connect(...)`` — *pipelined*: the successor may start consuming the
+  producer's output while the producer is still running (tasks 1/2 reading
+  from their download processes).
+* ``start_after`` gates — the successor's analysis starts only once the named
+  processes finished (task 3, which starts after tasks 1 and 2 complete).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .ppoly import PPoly
+from .process import Process
+from .solver import ProgressResult, Segment, solve
+
+
+@dataclass
+class _Edge:
+    src: str
+    output: str
+    dst: str
+    dep: str
+
+
+@dataclass
+class WorkflowResult:
+    results: dict[str, ProgressResult]
+    makespan: float
+    order: list[str]
+
+    def bottleneck_timeline(self) -> list[tuple[float, float, str, str, str]]:
+        """Flattened ``(t0, t1, process, kind, name)`` across all processes."""
+        out = []
+        for pname, r in self.results.items():
+            for s in r.segments:
+                t1 = min(s.t_end, r.finish_time)
+                if t1 > s.t_start:
+                    out.append((s.t_start, t1, pname, s.kind, s.name))
+        out.sort()
+        return out
+
+    def finish(self, name: str) -> float:
+        return self.results[name].finish_time
+
+
+class Workflow:
+    """A DAG of BottleMod processes with explicit resource allocations."""
+
+    def __init__(self):
+        self.processes: dict[str, Process] = {}
+        self.resource_alloc: dict[str, dict[str, PPoly]] = {}
+        self.external_data: dict[str, dict[str, PPoly]] = {}
+        self.edges: list[_Edge] = []
+        self.gates: dict[str, list[str]] = {}
+
+    # -- construction -------------------------------------------------------
+    def add(self, proc: Process, resources: dict[str, PPoly] | None = None,
+            start_after: list[str] | None = None) -> "Workflow":
+        if proc.name in self.processes:
+            raise ValueError(f"duplicate process {proc.name!r}")
+        self.processes[proc.name] = proc
+        self.resource_alloc[proc.name] = dict(resources or {})
+        self.external_data.setdefault(proc.name, {})
+        if start_after:
+            self.gates[proc.name] = list(start_after)
+        return self
+
+    def connect(self, src: str, dst: str, dep: str, output: str = "out") -> "Workflow":
+        self.edges.append(_Edge(src, output, dst, dep))
+        return self
+
+    def set_data_input(self, proc: str, dep: str, fn: PPoly) -> "Workflow":
+        self.external_data.setdefault(proc, {})[dep] = fn
+        return self
+
+    def set_resource_input(self, proc: str, res: str, fn: PPoly) -> "Workflow":
+        self.resource_alloc.setdefault(proc, {})[res] = fn
+        return self
+
+    # -- analysis -------------------------------------------------------------
+    def _topo_order(self) -> list[str]:
+        deps: dict[str, set[str]] = {n: set() for n in self.processes}
+        for e in self.edges:
+            deps[e.dst].add(e.src)
+        for n, gs in self.gates.items():
+            deps[n].update(gs)
+        order: list[str] = []
+        ready = sorted(n for n, d in deps.items() if not d)
+        deps = {n: set(d) for n, d in deps.items()}
+        while ready:
+            n = ready.pop()
+            order.append(n)
+            for m in list(deps):
+                if n in deps[m]:
+                    deps[m].discard(n)
+                    if not deps[m] and m not in order and m not in ready:
+                        ready.append(m)
+            ready.sort()
+        if len(order) != len(self.processes):
+            raise ValueError("workflow dependency graph has a cycle")
+        return order
+
+    def analyze(self) -> WorkflowResult:
+        order = self._topo_order()
+        results: dict[str, ProgressResult] = {}
+        for name in order:
+            proc = self.processes[name]
+            t0 = 0.0
+            for g in self.gates.get(name, []):
+                f = results[g].finish_time
+                if not np.isfinite(f):
+                    raise ValueError(f"gate {g!r} of {name!r} never finishes")
+                t0 = max(t0, f)
+            data_inputs: dict[str, PPoly] = dict(self.external_data.get(name, {}))
+            for e in self.edges:
+                if e.dst == name:
+                    data_inputs[e.dep] = results[e.src].output_function(e.output)
+            missing = set(proc.data) - set(data_inputs)
+            if missing:
+                raise ValueError(f"process {name!r} missing data inputs {sorted(missing)}")
+            results[name] = solve(proc, data_inputs, self.resource_alloc.get(name, {}), t0=t0)
+        makespan = max((r.finish_time for r in results.values()), default=0.0)
+        return WorkflowResult(results=results, makespan=makespan, order=order)

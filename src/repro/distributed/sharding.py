@@ -1,0 +1,123 @@
+"""Logical-axis sharding rules (MaxText-style) for pjit/GSPMD.
+
+Model code annotates parameters and activations with *logical* axis names
+("embed", "ffn", "heads", "experts", "batch", ...).  A rule table maps each
+logical name to zero or more *mesh* axes.  At lowering time the active
+:class:`AxisRules` context resolves names to ``PartitionSpec``s, silently
+dropping mappings that do not divide the dimension (so one rule table serves
+all 10 architectures) or that reference axes absent from the current mesh
+(so the same model code runs single-pod and multi-pod).
+
+Parallelism coverage:
+  * DP   — "batch" -> ("pod", "data")
+  * FSDP — "embed" -> "data"  (ZeRO-3: parameters + optimizer state sharded
+            over the data axis; GSPMD inserts the all-gathers)
+  * TP   — "ffn"/"heads"/"vocab" -> "model" (Megatron-style)
+  * EP   — "experts" -> "model"
+  * SP   — "seq" -> "model" for long-context activations (optional rule)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# default rule table: logical name -> tuple of candidate mesh axes
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "embed": ("data",),          # FSDP / ZeRO-3
+    "ffn": ("model",),           # Megatron TP
+    "heads": ("model",),
+    "kv": (),                    # small GQA kv projections: replicate
+    "experts": ("model",),       # expert parallelism
+    "layers": (),                # scanned stack: never sharded
+    "seq": (),                   # flip to ("model",) for sequence parallelism
+    "act_embed": (),
+    "kv_seq": (),                # decode kv caches: shard over data when B>1
+    "cache_heads": ("model",),
+    "cache_batch": ("pod", "data"),
+}
+
+_tls = threading.local()
+
+
+@dataclass
+class AxisRules:
+    mesh: Mesh
+    rules: dict[str, tuple[str, ...]] = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def spec_for(self, axes: tuple[str | None, ...], shape: tuple[int, ...] | None = None) -> PartitionSpec:
+        """Resolve logical axes to a PartitionSpec, checking divisibility."""
+        out = []
+        used: set[str] = set()
+        for i, name in enumerate(axes):
+            if name is None:
+                out.append(None)
+                continue
+            cand = self.rules.get(name, ())
+            picked = []
+            for ax in cand:
+                if ax not in self.mesh.shape or ax in used:
+                    continue
+                size = self.mesh.shape[ax]
+                dim = shape[i] if shape is not None else None
+                cur = int(np.prod([self.mesh.shape[a] for a in picked], initial=1))
+                if dim is not None and dim % (cur * size) != 0:
+                    continue
+                picked.append(ax)
+            used.update(picked)
+            if not picked:
+                out.append(None)
+            elif len(picked) == 1:
+                out.append(picked[0])
+            else:
+                out.append(tuple(picked))
+        while out and out[-1] is None:
+            out.pop()
+        return PartitionSpec(*out)
+
+    def sharding_for(self, axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(tuple(axes), shape))
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, overrides: dict[str, tuple[str, ...]] | None = None):
+    prev = getattr(_tls, "rules", None)
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    _tls.rules = AxisRules(mesh=mesh, rules=rules)
+    try:
+        yield _tls.rules
+    finally:
+        _tls.rules = prev
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_tls, "rules", None)
+
+
+def constrain(x, axes: tuple[str | None, ...]):
+    """``with_sharding_constraint`` against the active rules (no-op outside)."""
+    r = current_rules()
+    if r is None:
+        return x
+    spec = r.spec_for(tuple(axes), tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def tree_shardings(axes_tree, shapes_tree):
+    """Map parallel (axes, shapes) pytrees to NamedShardings (for pjit)."""
+    r = current_rules()
+    assert r is not None, "tree_shardings requires an active axis_rules context"
+    return jax.tree.map(
+        lambda a, s: r.sharding_for(a, tuple(s.shape)),
+        axes_tree, shapes_tree,
+        is_leaf=lambda a: isinstance(a, tuple) and all(isinstance(e, (str, type(None))) for e in a),
+    )

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+* ``ppoly_eval`` — batched piecewise-polynomial evaluation (BottleMod's
+  online-analysis hot loop).
+* ``flash_attention`` — tiled causal GQA attention with sliding-window
+  support (the transformer substrate's hot loop).
+* ``wkv6`` — fused chunked RWKV-6 recurrence with data-dependent decay (the
+  rwkv memory-floor fix identified in EXPERIMENTS.md §Perf: the O(C²·N)
+  pairwise-decay tensors stay VMEM-resident).
+
+Each kernel ships with ``ops.py`` (jit'd public wrapper) and ``ref.py``
+(pure-jnp oracle); tests sweep shapes/dtypes in interpret mode against the
+oracle.
+"""

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: flash attention (causal GQA, optional sliding window).
+
+TPU adaptation of FlashAttention's SRAM tiling (see DESIGN.md): the K/V
+stream lives on the *last grid axis* so VMEM scratch (accumulator + online
+softmax statistics) persists across KV blocks for a fixed query block — the
+canonical TPU pattern.  Block shapes are MXU-aligned (q/k tiles of 128×128 by
+default, head_dim on the 128-lane axis), and the score matmuls accumulate in
+float32 regardless of input dtype.
+
+Causal and sliding-window structure is exploited at *block* granularity:
+blocks entirely above the diagonal (or entirely outside the window) skip
+their matmuls via ``pl.when`` — the same work-skipping that makes
+FlashAttention's causal variant ~2x cheaper, expressed TPU-style.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, n_kv_blocks: int,
+                  causal: bool, window: int | None, scale: float):
+    i = pl.program_id(1)          # query block
+    j = pl.program_id(2)          # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = i * block_q
+    q_hi = q_lo + block_q - 1
+    k_lo = j * block_k
+    k_hi = k_lo + block_k - 1
+
+    # block-level relevance: any (qi, kj) pair with kj <= qi (causal) and
+    # kj > qi - window (sliding window)?
+    needed = True
+    if causal:
+        needed = jnp.logical_and(needed, k_lo <= q_hi)
+    if window is not None:
+        needed = jnp.logical_and(needed, k_hi > q_lo - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)        # (bq, D)
+        k = k_ref[0].astype(jnp.float32)        # (bk, D)
+        v = v_ref[0].astype(jnp.float32)        # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        qi = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kj = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kj <= qi)
+        if window is not None:
+            mask = jnp.logical_and(mask, kj > qi - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                     # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                  # (bq, bk)
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True):
+    """q (B,H,S,D), k/v (B,Hkv,S,D) → (B,H,S,D).  S must divide the blocks."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, "GQA requires H % Hkv == 0"
+    group = H // Hkv
+    assert S % block_q == 0 and S % block_k == 0, "pad sequence to block multiples"
+    n_q = S // block_q
+    n_k = S // block_k
+
+    qf = q.reshape(B * H, S, D)
+    kf = k.reshape(B * Hkv, S, D)
+    vf = v.reshape(B * Hkv, S, D)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, n_kv_blocks=n_k,
+        causal=causal, window=window, scale=1.0 / (D ** 0.5))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, D), jnp.float32),
+            _vmem((block_q, 1), jnp.float32),
+            _vmem((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, D)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,49 @@
+"""Public op: flash attention with auto-padding and backend dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                             "use_pallas", "interpret"))
+def _dispatch(q, k, v, causal, window, block_q, block_k, use_pallas, interpret):
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    B, H, S, D = q.shape
+    Sp = _ceil_to(S, max(block_q, block_k))
+    if Sp != S:
+        pad = ((0, 0), (0, 0), (0, Sp - S), (0, 0))
+        qp, kp, vp = (jnp.pad(x, pad) for x in (q, k, v))
+    else:
+        qp, kp, vp = q, k, v
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k, interpret=interpret)
+    return out[:, :, :S, :]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    use_pallas: bool | None = None, interpret: bool | None = None):
+    """Tiled attention: q (B,H,S,D), k/v (B,Hkv,S,D) → (B,H,S,D).
+
+    On TPU the Pallas kernel runs compiled; on CPU it defaults to the jnp
+    reference for jit'd models (interpret-mode Pallas is validated in tests
+    but too slow for full-model smoke tests).
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if interpret is None:
+        interpret = not on_tpu
+    return _dispatch(q, k, v, causal, window, block_q, block_k, use_pallas, interpret)

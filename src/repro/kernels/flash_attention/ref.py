@@ -1,0 +1,35 @@
+"""Pure-jnp oracle: dense causal GQA attention with optional sliding window."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int | None = None) -> jnp.ndarray:
+    """Dense reference attention.
+
+    q: (B, H, S, D); k, v: (B, Hkv, S, D) with H % Hkv == 0.
+    ``window``: sliding-window size w — query i attends keys in
+    (i-w, i] (Mistral/h2o-danube convention).  Returns (B, H, S, D) in q's
+    dtype; softmax is computed in float32.
+    """
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(D))
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

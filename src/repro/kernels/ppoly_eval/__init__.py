@@ -1,0 +1,4 @@
+from .ops import pack_ppolys, ppoly_eval
+from .ref import PAD_START, ppoly_eval_ref
+
+__all__ = ["ppoly_eval", "ppoly_eval_ref", "pack_ppolys", "PAD_START"]

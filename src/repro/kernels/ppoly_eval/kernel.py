@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: batched piecewise-polynomial evaluation.
+
+BottleMod's hot loop when used online (Sect. 6 / Sect. 8: "repeatedly executed
+with updated state from monitoring") is evaluating *many* piecewise functions
+(progress, resource usage, buffered data of every process; every candidate
+allocation of a what-if sweep à la Fig. 7) at *many* time points.
+
+TPU adaptation (see DESIGN.md): a data-dependent binary search per query is
+VPU-hostile, so each (function-tile × query-tile) block holds the whole
+breakpoint/coefficient table in VMEM and selects pieces with a vectorized
+compare-reduce (``idx = Σ (start ≤ t) − 1``) followed by a one-hot masked
+Horner evaluation — O(P·K) lane-parallel FLOPs per query, no gathers, no
+scalar loops.  The MXU is not involved; this is a pure VPU kernel, and block
+shapes keep the last dimension at 128 lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ppoly_kernel(starts_ref, coeffs_ref, q_ref, out_ref, *, n_pieces: int, n_coef: int):
+    starts = starts_ref[...]            # (bB, P)
+    coeffs = coeffs_ref[...]            # (bB, P, K)
+    q = q_ref[...]                      # (bB, bT)
+
+    cmp = (starts[:, None, :] <= q[:, :, None]).astype(jnp.float32)   # (bB,bT,P)
+    idx = jnp.maximum(jnp.sum(cmp, axis=-1) - 1.0, 0.0)               # (bB,bT)
+    piece_ids = jax.lax.broadcasted_iota(jnp.float32, (1, 1, n_pieces), 2)
+    onehot = (idx[:, :, None] == piece_ids).astype(jnp.float32)       # (bB,bT,P)
+
+    # local coordinate, zeroed on non-selected pieces so padding sentinels
+    # (1e30) cannot overflow into the masked sum
+    u = (q[:, :, None] - starts[:, None, :]) * onehot                 # (bB,bT,P)
+
+    acc = jnp.zeros_like(u)
+    for k in range(n_coef - 1, -1, -1):
+        acc = acc * u + coeffs[:, None, :, k]
+    out_ref[...] = jnp.sum(acc * onehot, axis=-1)
+
+
+def ppoly_eval_pallas(starts: jnp.ndarray, coeffs: jnp.ndarray, q: jnp.ndarray,
+                      *, block_b: int = 8, block_t: int = 128,
+                      interpret: bool = True) -> jnp.ndarray:
+    """``pallas_call`` wrapper; shapes must be pre-padded to block multiples.
+
+    starts (B, P) · coeffs (B, P, K) · q (B, T) → (B, T), all float32.
+    """
+    B, P = starts.shape
+    K = coeffs.shape[-1]
+    T = q.shape[-1]
+    assert B % block_b == 0 and T % block_t == 0, "pad inputs to block multiples"
+
+    grid = (B // block_b, T // block_t)
+    kernel = functools.partial(_ppoly_kernel, n_pieces=P, n_coef=K)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, P, K), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        interpret=interpret,
+    )(starts, coeffs, q)

@@ -1,0 +1,70 @@
+"""Public op: batched piecewise-polynomial evaluation (jit'd, auto-padded)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import ppoly_eval_pallas
+from .ref import PAD_START, ppoly_eval_ref
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_b", "block_t"))
+def _dispatch(starts, coeffs, q, use_pallas: bool, interpret: bool, block_b: int, block_t: int):
+    if not use_pallas:
+        return ppoly_eval_ref(starts, coeffs, q)
+    B, P = starts.shape
+    T = q.shape[-1]
+    Bp, Tp = _ceil_to(B, block_b), _ceil_to(T, block_t)
+    sp = jnp.pad(starts, ((0, Bp - B), (0, 0)), constant_values=PAD_START)
+    sp = sp.at[B:, 0].set(0.0)  # padded rows still need a valid piece 0
+    cp = jnp.pad(coeffs, ((0, Bp - B), (0, 0), (0, 0)))
+    qp = jnp.pad(q, ((0, Bp - B), (0, Tp - T)))
+    out = ppoly_eval_pallas(sp, cp, qp, block_b=block_b, block_t=block_t,
+                            interpret=interpret)
+    return out[:B, :T]
+
+
+def ppoly_eval(starts, coeffs, q, *, use_pallas: bool | None = None,
+               interpret: bool | None = None, block_b: int = 8, block_t: int = 128):
+    """Evaluate B piecewise polynomials at T points each: (B,T) float32.
+
+    On TPU the Pallas kernel runs compiled; elsewhere it runs in interpret
+    mode (same kernel body, Python/XLA execution) or falls back to the jnp
+    reference — both bit-agree with ``repro.core.ppoly.PPoly.__call__`` up to
+    float32.
+    """
+    starts = jnp.asarray(starts, jnp.float32)
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = True
+    if interpret is None:
+        interpret = not on_tpu
+    return _dispatch(starts, coeffs, q, use_pallas, interpret, block_b, block_t)
+
+
+def pack_ppolys(ppolys, max_pieces: int | None = None, max_coef: int | None = None):
+    """Pack a list of ``repro.core.ppoly.PPoly`` into padded (starts, coeffs).
+
+    Returns float32 arrays (B, P) / (B, P, K) ready for :func:`ppoly_eval`.
+    """
+    P = max_pieces or max(f.n_pieces for f in ppolys)
+    K = max_coef or max(f.coeffs.shape[1] for f in ppolys)
+    B = len(ppolys)
+    starts = np.full((B, P), PAD_START, np.float32)
+    coeffs = np.zeros((B, P, K), np.float32)
+    for i, f in enumerate(ppolys):
+        n = min(f.n_pieces, P)
+        k = min(f.coeffs.shape[1], K)
+        starts[i, :n] = f.starts[:n]
+        coeffs[i, :n, :k] = f.coeffs[:n, :k]
+    return jnp.asarray(starts), jnp.asarray(coeffs)

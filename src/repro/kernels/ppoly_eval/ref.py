@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for batched piecewise-polynomial evaluation."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PAD_START = 1e30  # sentinel start for padding pieces (never selected)
+
+
+def ppoly_eval_ref(starts: jnp.ndarray, coeffs: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate a batch of right-continuous piecewise polynomials.
+
+    Args:
+      starts: (B, P) piece start positions, ascending per row; padding pieces
+        use ``PAD_START``.
+      coeffs: (B, P, K) ascending local coefficients (c0 + c1*u + ...), with
+        ``u = t - starts[i]``.
+      q:      (B, T) query positions.
+
+    Returns:
+      (B, T) values.  Queries before ``starts[:, 0]`` clamp to piece 0
+      (matching ``repro.core.ppoly.PPoly.__call__``).
+    """
+    B, T = q.shape
+    K = coeffs.shape[-1]
+    cmp = starts[:, None, :] <= q[:, :, None]                    # (B, T, P)
+    idx = jnp.maximum(jnp.sum(cmp.astype(jnp.int32), axis=-1) - 1, 0)  # (B, T)
+    c = jnp.take_along_axis(coeffs, jnp.broadcast_to(idx[:, :, None], (B, T, K)), axis=1)
+    s = jnp.take_along_axis(starts, idx, axis=1)                 # (B, T)
+    u = q - s
+    acc = jnp.zeros_like(q)
+    for k in range(K - 1, -1, -1):
+        acc = acc * u + c[..., k]
+    return acc

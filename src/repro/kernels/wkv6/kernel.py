@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: fused chunked RWKV-6 wkv (data-dependent decay).
+
+EXPERIMENTS.md §Perf identified the rwkv6 memory floor as the chunk-scan's
+materialized intermediates (the (C, C, N) pairwise-decay tensor and the
+per-chunk stacking traffic).  This kernel fuses one chunk's whole update —
+log-decay cumsum, pairwise decay matrix, intra-chunk attention, state
+application and state advance — into a single VMEM-resident body:
+
+* grid = (B·H, n_chunks); the chunk axis is the LAST grid dimension, so the
+  (N, N) state lives in VMEM scratch across chunk steps (same pattern as the
+  flash-attention kernel's KV streaming);
+* per-step HBM traffic is just r/k/v/w chunk tiles in and the y tile out —
+  the O(C²·N) decay/attention tensors never leave VMEM;
+* the two O(C²·N) contractions (attention scores, attention·v) are MXU
+  matmuls; decay math runs on the VPU in f32.
+
+Chunk length and head dim default to MXU-friendly (C=64? no — RWKV uses
+C=32, N=64; scores are (C, C) with N contracted — padded to the 128 lane
+on the N axis by the caller when needed).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+                s_ref, *, chunk: int, n_chunks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = s0_ref[0]
+
+    r = r_ref[0].astype(jnp.float32)          # (C, N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (1, N)
+    s = s_ref[...]                            # (N, N) carried state
+
+    lw = jnp.log(jnp.maximum(w, 1e-30))
+    cum = jnp.cumsum(lw, axis=0)              # inclusive (C, N)
+    cume = cum - lw                           # exclusive
+
+    r_dec = r * jnp.exp(cume)
+    y_inter = jax.lax.dot_general(r_dec, s, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (C, N)
+
+    # pairwise decay, strictly lower triangular, log-space (never overflows)
+    diff = cume[:, None, :] - cum[None, :, :]                  # (C, C, N)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    W = jnp.where(tri[:, :, None], jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    # att[t, s_] = sum_n r[t,n] W[t,s_,n] k[s_,n]
+    att = jnp.sum((r[:, None, :] * W) * k[None, :, :], axis=-1)  # (C, C)
+    y_intra = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    diag = jnp.sum(r * u * k, axis=-1, keepdims=True)            # (C, 1)
+    y_ref[0] = (y_inter + y_intra + diag * v).astype(y_ref.dtype)
+
+    total = cum[-1]                                              # (N,)
+    k_fut = k * jnp.exp(total[None, :] - cum)                    # (C, N)
+    s_new = jnp.exp(total)[:, None] * s + jax.lax.dot_general(
+        k_fut, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    s_ref[...] = s_new
+
+    @pl.when(j == n_chunks - 1)
+    def _final():
+        sout_ref[0] = s_new
+
+
+def wkv6_pallas(r, k, v, w, u, s0, *, chunk: int = 32, interpret: bool = True):
+    """r/k/v/w: (B, L, H, N) with L % chunk == 0; u: (H, N); s0: (B, H, N, N).
+
+    Returns (y (B, L, H, N) f32, s_final (B, H, N, N) f32).
+    """
+    B, L, H, N = r.shape
+    assert L % chunk == 0, "pad L to a chunk multiple"
+    n_chunks = L // chunk
+    BH = B * H
+
+    def to_bh(a):  # (B, L, H, N) -> (BH, L, N)
+        return a.transpose(0, 2, 1, 3).reshape(BH, L, N)
+
+    rf, kf, vf, wf = (to_bh(a) for a in (r, k, v, w))
+    uf = jnp.broadcast_to(u[None], (B, H, N)).reshape(BH, 1, N)
+    s0f = s0.reshape(BH, N, N)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, s_fin = pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, N), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, N), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, N, N), lambda b, j: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, N), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, N, N), lambda b, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, L, N), jnp.float32),
+            jax.ShapeDtypeStruct((BH, N, N), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((N, N), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, s0f)
+
+    y = y.reshape(B, H, L, N).transpose(0, 2, 1, 3)
+    return y, s_fin.reshape(B, H, N, N)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,40 @@
+"""Public op: fused RWKV-6 wkv with padding + backend dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rwkv import wkv_chunked
+
+from .kernel import wkv6_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def _dispatch(r, k, v, w, u, s0, chunk, use_pallas, interpret):
+    if not use_pallas:
+        return wkv_chunked(r, k, v, w, u, s0, chunk=chunk)
+    L = r.shape[1]
+    pad = (-L) % chunk
+    if pad:
+        pads = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(a, pads) for a in (r, k, v))
+        w = jnp.pad(w, pads, constant_values=1.0)
+    y, s_fin = wkv6_pallas(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)
+    return y[:, :L], s_fin
+
+
+def wkv6(r, k, v, w, u, s0, *, chunk: int = 32,
+         use_pallas: bool | None = None, interpret: bool | None = None):
+    """Fused wkv: on TPU the Pallas kernel; elsewhere the jnp chunked form."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if interpret is None:
+        interpret = not on_tpu
+    return _dispatch(jnp.asarray(r, jnp.float32), jnp.asarray(k, jnp.float32),
+                     jnp.asarray(v, jnp.float32), jnp.asarray(w, jnp.float32),
+                     jnp.asarray(u, jnp.float32), jnp.asarray(s0, jnp.float32),
+                     chunk, use_pallas, interpret)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the chunked RWKV-6 wkv recurrence.
+
+Re-exports the recurrent per-token reference from the model zoo — the single
+source of truth for wkv semantics (models/rwkv.py validates its chunked form
+against it, the Pallas kernel validates against it here)."""
+
+from repro.models.rwkv import wkv_chunked as wkv_chunked_ref  # noqa: F401
+from repro.models.rwkv import wkv_recurrent_ref  # noqa: F401

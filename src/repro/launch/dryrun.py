@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# (The two lines above MUST run before any other import — jax locks the
+# device count at first initialization.  Do NOT set this flag globally:
+# smoke tests and benchmarks must keep seeing 1 device.)
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import pathlib           # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.configs import (SHAPES, applicable_shapes, apply_variants,  # noqa: E402
+                           get_config, list_archs)
+from repro.distributed.sharding import axis_rules                            # noqa: E402
+from repro.launch.mesh import make_production_mesh                           # noqa: E402
+from repro.launch.specs import make_cell, make_train_cell, lower_cell                         # noqa: E402
+from repro.perfmodel.hlo import analyze_hlo                                  # noqa: E402
+from repro.perfmodel.roofline import roofline_terms                          # noqa: E402
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             rule_overrides: dict | None = None, tag: str = "",
+             variants: list[str] | None = None, grad_accum: int = 1) -> dict:
+    cfg = get_config(arch)
+    if variants:
+        cfg = apply_variants(cfg, variants)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": n_chips,
+        "kind": shape.kind, "status": "ok", "tag": tag,
+    }
+    t0 = time.time()
+    try:
+        with mesh, axis_rules(mesh, rule_overrides):
+            if shape.kind == "train" and grad_accum > 1:
+                cell = make_train_cell(cfg, shape, grad_accum=grad_accum)
+            else:
+                cell = make_cell(cfg, shape)
+            lowered = lower_cell(cell)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            # track attention-score-sized tensors: the Pallas flash kernel
+            # (validated in tests, unloweable on the CPU dry-run backend)
+            # keeps them VMEM-resident on the TPU target
+            track: set[int] = set()
+            has_attn = cfg.ssm != "rwkv6"
+            if has_attn and shape.kind in ("train", "prefill"):
+                dshards = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+                mshards = mesh.shape.get("model", 1)
+                B_loc = shape.global_batch // dshards if shape.global_batch % dshards == 0 else shape.global_batch
+                H_loc = cfg.n_heads // mshards if cfg.n_heads % mshards == 0 else cfg.n_heads
+                S_eff = shape.seq_len
+                for hh in {H_loc, cfg.n_heads}:
+                    for width in (2, 4):
+                        track.add(B_loc * hh * S_eff * S_eff * width)
+            rep = analyze_hlo(hlo, track_sizes=frozenset(track))
+
+            rec["lower_s"] = round(t_lower - t0, 2)
+            rec["compile_s"] = round(t_compile - t_lower, 2)
+            rec["cost_analysis_raw"] = {k: float(v) for k, v in cost.items()
+                                        if isinstance(v, (int, float)) and k in
+                                        ("flops", "bytes accessed",
+                                         "bytes accessed output", "utilization")}
+            if mem is not None:
+                for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                             "temp_size_in_bytes", "generated_code_size_in_bytes",
+                             "alias_size_in_bytes", "peak_memory_in_bytes"):
+                    v = getattr(mem, attr, None)
+                    if v is not None:
+                        rec.setdefault("memory_analysis", {})[attr] = int(v)
+            rec["collectives"] = rep.as_dict()
+            rec["hlo_lines"] = hlo.count("\n")
+
+            # trip-count-aware quantities (see perfmodel/hlo.py): XLA's own
+            # cost_analysis counts while bodies once and charges in-place
+            # stack updates at full-buffer size; flops come from the
+            # dot-walk, bytes from the in-place-aware fusion-boundary walk.
+            raw_flops = float(cost.get("flops", 0.0))
+            raw_bytes = float(cost.get("bytes accessed", 0.0))
+            loop_factor = (rep.flops / raw_flops) if raw_flops > 0 else 1.0
+            flops_dev = rep.flops
+            bytes_dev = rep.bytes
+            rec["per_device"] = {
+                "flops": flops_dev, "bytes": bytes_dev,
+                "bytes_costanalysis_scaled": raw_bytes * loop_factor,
+                "loop_correction_factor": loop_factor,
+                "collective_bytes": rep.collective_bytes,
+            }
+
+            if rep.tracked_bytes > 0:
+                # flash-kernel estimate: remove score-chain traffic, add the
+                # kernel's q/k/v/o streaming traffic
+                n_attn = cfg.n_layers // (cfg.attn_every or 1)
+                dshards = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+                mshards = mesh.shape.get("model", 1)
+                B_loc = max(shape.global_batch // dshards, 1)
+                H_loc = max(cfg.n_heads // mshards, 1)
+                Hk_loc = max(cfg.n_kv_heads // mshards, 1)
+                flash_io = n_attn * B_loc * shape.seq_len * cfg.head_dim * \
+                    (H_loc * 2 + Hk_loc * 2) * 2 * 3.0
+                adj_bytes = max(bytes_dev - rep.tracked_bytes + flash_io, 0.0)
+                rec["flash_estimate"] = {
+                    "score_bytes_detected": rep.tracked_bytes,
+                    "flash_io_bytes": flash_io,
+                    "bytes": adj_bytes,
+                    "roofline": roofline_terms(
+                        cfg=cfg, shape=shape, n_chips=n_chips,
+                        flops_per_device=flops_dev, bytes_per_device=adj_bytes,
+                        collective_bytes_per_device=rep.collective_bytes),
+                }
+            rec["roofline"] = roofline_terms(
+                cfg=cfg, shape=shape, n_chips=n_chips,
+                flops_per_device=flops_dev,
+                bytes_per_device=bytes_dev,
+                collective_bytes_per_device=rep.collective_bytes,
+            )
+            rr = rec["roofline"]
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
+                  f"compile ok in {rec['compile_s']}s")
+            print(f"[dryrun]   per-device flops={flops_dev:.3e} bytes={bytes_dev:.3e} "
+                  f"coll={rep.collective_bytes:.3e}")
+            print(f"[dryrun]   terms: compute={rr['compute_s']:.4f}s "
+                  f"memory={rr['memory_s']:.4f}s collective={rr['collective_s']:.4f}s "
+                  f"-> {rr['dominant']}-bound, useful-flops {rr['useful_flops_ratio']:.2f}")
+            print(f"[dryrun]   memory_analysis: {rec.get('memory_analysis')}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: FAILED — {rec['error']}")
+    rec["total_s"] = round(time.time() - t0, 2)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = out_dir / f"{arch}_{shape_name}_{mesh_name}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run: lower + compile "
+                                 "every (arch × shape × mesh) cell")
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="run every applicable cell")
+    ap.add_argument("--out", default=str(RESULTS))
+    ap.add_argument("--tag", default="", help="suffix for perf-iteration variants")
+    ap.add_argument("--variants", default="", help="comma-separated config variants")
+    ap.add_argument("--rules", default="", help="sharding rule overrides, e.g. heads=:embed=data")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in list_archs():
+            for shape_name in applicable_shapes(get_config(arch)):
+                for mp in meshes:
+                    cells.append((arch, shape_name, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    n_fail = 0
+    for arch, shape_name, mp in cells:
+        mesh_name = "multi" if mp else "single"
+        suffix = f"_{args.tag}" if args.tag else ""
+        path = out_dir / f"{arch}_{shape_name}_{mesh_name}{suffix}.json"
+        if args.skip_existing and path.exists():
+            prev = json.loads(path.read_text())
+            if prev.get("status") == "ok":
+                print(f"[dryrun] skip existing {path.name}")
+                continue
+        overrides = None
+        if args.rules:
+            overrides = {}
+            for kv in args.rules.split(":"):
+                k, _, v = kv.partition("=")
+                overrides[k] = tuple(a for a in v.split("+") if a)
+        rec = run_cell(arch, shape_name, mp, out_dir, tag=args.tag,
+                       rule_overrides=overrides, grad_accum=args.grad_accum,
+                       variants=[v for v in args.variants.split(",") if v])
+        n_fail += rec["status"] != "ok"
+    print(f"[dryrun] done: {len(cells)} cells, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

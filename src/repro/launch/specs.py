@@ -1,0 +1,201 @@
+"""ShapeDtypeStruct input stand-ins + jit'd step builders for every
+(architecture × shape) cell — shared by the dry-run and the benchmarks.
+
+No device allocation happens here: everything is shapes, logical axes and
+function closures.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.distributed.sharding import current_rules
+from repro.models import transformer as T
+from repro.models.common import ModelConfig, param_axes, param_shapes_concrete
+from repro.optim import OptConfig, adamw_init, adamw_update, opt_state_axes
+
+
+# ---------------------------------------------------------------------------
+# input specs (paper-prompt requirement: weak-type-correct, shardable)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> tuple[dict, dict]:
+    """(ShapeDtypeStruct tree, logical-axes tree) for a data batch."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        S_in = 1
+    else:
+        S_in = S
+    specs: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        specs["embeddings"] = jax.ShapeDtypeStruct((B, S_in, cfg.d_model), cfg.jdtype)
+        axes["embeddings"] = ("batch", "seq", "act_embed")
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S_in, cfg.n_codebooks), jnp.int32)
+            axes["labels"] = ("batch", "seq", None)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S_in), jnp.int32)
+        axes["tokens"] = ("batch", "seq")
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S_in), jnp.int32)
+            axes["labels"] = ("batch", "seq")
+    if cfg.mrope_sections is not None:
+        specs["positions"] = jax.ShapeDtypeStruct((3, B, S_in), jnp.int32)
+        axes["positions"] = (None, "batch", "seq")
+    return specs, axes
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> tuple[dict, dict]:
+    concrete = jax.eval_shape(lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+    return concrete, T.cache_axes(cfg)
+
+
+def param_specs_tree(cfg: ModelConfig) -> tuple[dict, dict]:
+    return param_shapes_concrete(cfg), param_axes(cfg)
+
+
+def opt_specs_tree(cfg: ModelConfig, opt: OptConfig) -> tuple[dict, dict]:
+    pshapes = param_shapes_concrete(cfg)
+    shapes = jax.eval_shape(lambda: adamw_init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pshapes), opt))
+    return shapes, opt_state_axes(param_axes(cfg))
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Cell:
+    """Everything needed to lower one (arch × shape) cell on a mesh."""
+    fn: Callable
+    args: tuple            # ShapeDtypeStruct trees
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()
+
+
+def _shardings(axes_tree, shapes_tree):
+    rules = current_rules()
+    assert rules is not None
+
+    def leaf(a, s):
+        return rules.sharding_for(tuple(a) if a else (), tuple(s.shape))
+
+    return jax.tree.map(
+        leaf, axes_tree, shapes_tree,
+        is_leaf=lambda a: (isinstance(a, tuple)
+                           and all(isinstance(e, (str, type(None))) for e in a)))
+
+
+def make_train_cell(cfg: ModelConfig, shape: ShapeSpec, opt: OptConfig | None = None,
+                    grad_accum: int = 1) -> Cell:
+    """``grad_accum > 1`` splits the global batch into microbatches scanned
+    sequentially, accumulating gradients before one optimizer update — the
+    standard activation-memory lever (per-microbatch activations shrink by
+    the accumulation factor; weight traffic is unchanged)."""
+    opt = opt or OptConfig()
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(lambda p: T.loss_fn(p, cfg, batch))(params)
+        else:
+            def micro(carry, mb):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(lambda p: T.loss_fn(p, cfg, mb))(params)
+                return (jax.tree.map(jnp.add, acc, g), lsum + l), None
+
+            micro_batches = jax.tree.map(
+                lambda a: a.reshape((grad_accum, a.shape[0] // grad_accum) + a.shape[1:])
+                if a.ndim >= 1 and a.shape[0] % grad_accum == 0 else
+                a.reshape((grad_accum, -1) + a.shape[2:]), batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), micro_batches)
+            grads = jax.tree.map(lambda g: (g / grad_accum).astype(jnp.float32), gsum)
+            loss = lsum / grad_accum
+        params2, opt2, metrics = adamw_update(grads, opt_state, params, opt)
+        metrics["loss"] = loss
+        return params2, opt2, metrics
+
+    pshape, paxes = param_specs_tree(cfg)
+    oshape, oaxes = opt_specs_tree(cfg, opt)
+    bshape, baxes = batch_specs(cfg, shape)
+    psh = _shardings(paxes, pshape)
+    osh = _shardings(oaxes, oshape)
+    bsh = _shardings(baxes, bshape)
+    rules = current_rules()
+    scalar = rules.sharding_for((), ())
+    return Cell(
+        fn=train_step,
+        args=(pshape, oshape, bshape),
+        in_shardings=(psh, osh, bsh),
+        out_shardings=(psh, osh, {"grad_norm": scalar, "lr": scalar, "loss": scalar}),
+        donate=(0, 1),
+    )
+
+
+def make_prefill_cell(cfg: ModelConfig, shape: ShapeSpec) -> Cell:
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch)
+
+    pshape, paxes = param_specs_tree(cfg)
+    bshape, baxes = batch_specs(cfg, shape)
+    psh = _shardings(paxes, pshape)
+    bsh = _shardings(baxes, bshape)
+    rules = current_rules()
+    if cfg.frontend == "audio":
+        out_ax = ("batch", None, "vocab")
+        out_shape = (shape.global_batch, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        out_ax = ("batch", "vocab")
+        out_shape = (shape.global_batch, cfg.vocab_size)
+    osh = rules.sharding_for(out_ax, out_shape)
+    return Cell(fn=prefill_step, args=(pshape, bshape), in_shardings=(psh, bsh),
+                out_shardings=osh)
+
+
+def make_decode_cell(cfg: ModelConfig, shape: ShapeSpec) -> Cell:
+    def decode_step(params, cache, batch, pos):
+        return T.decode_step(params, cfg, cache, batch, pos)
+
+    pshape, paxes = param_specs_tree(cfg)
+    cshape, caxes = cache_specs(cfg, shape)
+    bshape, baxes = batch_specs(cfg, shape)
+    psh = _shardings(paxes, pshape)
+    csh = _shardings(caxes, cshape)
+    bsh = _shardings(baxes, bshape)
+    rules = current_rules()
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = rules.sharding_for((), ())
+    if cfg.frontend == "audio":
+        out_ax = ("batch", None, "vocab")
+        out_shape = (shape.global_batch, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        out_ax = ("batch", "vocab")
+        out_shape = (shape.global_batch, cfg.vocab_size)
+    lsh = rules.sharding_for(out_ax, out_shape)
+    return Cell(fn=decode_step, args=(pshape, cshape, bshape, pos_spec),
+                in_shardings=(psh, csh, bsh, pos_sh),
+                out_shardings=(lsh, csh), donate=(1,))
+
+
+def make_cell(cfg: ModelConfig, shape: ShapeSpec) -> Cell:
+    if shape.kind == "train":
+        return make_train_cell(cfg, shape)
+    if shape.kind == "prefill":
+        return make_prefill_cell(cfg, shape)
+    return make_decode_cell(cfg, shape)
+
+
+def lower_cell(cell: Cell):
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=cell.donate or None)
+    return jitted.lower(*cell.args)

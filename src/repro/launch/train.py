@@ -1,0 +1,63 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Runs the fault-tolerant trainer (auto-resume, async checkpoints, straggler
+monitor) on the local devices.  ``--preset 100m`` trains a ~100M-parameter
+dense model; ``--smoke`` uses the reduced per-arch config (CI-sized).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.data import DataConfig
+from repro.models.common import ModelConfig
+from repro.optim import OptConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def preset_100m() -> ModelConfig:
+    """~100M-parameter llama-style dense model (the e2e example target)."""
+    return ModelConfig(
+        name="dense-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32000, head_dim=64,
+        dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs() + ["100m"], default="100m")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--moment-dtype", default="float32", choices=["float32", "bfloat16"])
+    args = ap.parse_args()
+
+    if args.arch == "100m":
+        cfg = preset_100m()
+    else:
+        cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    dcfg = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+        n_codebooks=cfg.n_codebooks if cfg.frontend == "audio" else 0,
+        d_model=cfg.d_model if cfg.frontend == "audio" else 0,
+        mrope=cfg.mrope_sections is not None,
+    )
+    tr = Trainer(cfg,
+                 TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                               ckpt_dir=args.ckpt_dir),
+                 opt_cfg=OptConfig(moment_dtype=args.moment_dtype),
+                 data_cfg=dcfg)
+    summary = tr.run()
+    nice = {k: v for k, v in summary.items() if k != "losses"}
+    print("[train] summary:", json.dumps(nice, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""GQA attention: training/prefill (flash or XLA path) and cached decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+from .common import ModelConfig, apply_mrope, apply_rope
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    B, S, D = x.shape
+    H, Hk, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, Dh)
+    k = (x @ p["wk"]).reshape(B, S, Hk, Dh)
+    v = (x @ p["wv"]).reshape(B, S, Hk, Dh)
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _dense_attention(q, k, v, *, causal, window, f32_scores: bool):
+    """XLA attention path; score/softmax dtype follows ``f32_scores``
+    (the "attn_bf16" §Perf variant halves score-chain HBM traffic)."""
+    B, H, S, D = q.shape
+    group = H // k.shape[1]
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    cdt = jnp.float32 if f32_scores else q.dtype
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(cdt), kr.astype(cdt))
+    s = s * (1.0 / (D ** 0.5))
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None, None], s, jnp.asarray(-30000.0 if cdt == jnp.bfloat16 else -1e30, cdt))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp((s - m).astype(cdt))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(cdt)).astype(q.dtype)
+
+
+def attn_forward(p, x, cfg: ModelConfig, positions, *, use_flash: bool | None = None):
+    """Full-sequence attention (training / prefill).  x: (B, S, D)."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    qh = q.transpose(0, 2, 1, 3)   # (B,H,S,Dh)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    if use_flash is None:
+        use_flash = jax.default_backend() == "tpu"
+    if use_flash:
+        o = flash_attention(qh, kh, vh, causal=True, window=cfg.window)
+    else:
+        o = _dense_attention(qh, kh, vh, causal=True, window=cfg.window,
+                             f32_scores=cfg.attn_f32)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return o @ p["wo"], (kh, vh)
+
+
+def attn_decode(p, x, cfg: ModelConfig, cache_k, cache_v, pos_idx):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, Hkv, S_ctx, Dh) — for sliding-window models
+    the cache is a ring buffer of size ``window``.  ``pos_idx`` (scalar int)
+    is the absolute position of the new token.  Returns (out, new_k, new_v).
+    """
+    B, _, D = x.shape
+    H, Hk, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    S_ctx = cache_k.shape[2]
+    positions = jnp.full((B, 1), pos_idx, jnp.int32)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    q = q.transpose(0, 2, 1, 3)                       # (B,H,1,Dh)
+    k = k.transpose(0, 2, 1, 3)                       # (B,Hk,1,Dh)
+    v = v.transpose(0, 2, 1, 3)
+    slot = pos_idx % S_ctx if cfg.window is not None else pos_idx
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, 0, slot, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, 0, slot, 0))
+    group = H // Hk
+    kr = jnp.repeat(ck, group, axis=1)                # (B,H,S_ctx,Dh)
+    vr = jnp.repeat(cv, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(Dh))
+    kpos = jnp.arange(S_ctx)
+    if cfg.window is not None:
+        # ring buffer: valid entries are the last min(pos+1, window) writes
+        valid = kpos < jnp.minimum(pos_idx + 1, S_ctx)
+    else:
+        valid = kpos <= pos_idx
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p_attn, vr.astype(jnp.float32))
+    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(B, 1, H * Dh)
+    return o @ p["wo"], ck, cv

@@ -1,0 +1,372 @@
+"""Shared model machinery: config, parameter specs, norms, RoPE.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every leaf is
+declared through a :class:`Spec` carrying its *logical axis names*; the
+distribution layer (``repro.distributed.sharding``) maps logical names to
+mesh axes, MaxText-style.  The same spec tree materializes as
+
+* random initializations (``init_params``),
+* ``jax.ShapeDtypeStruct`` stand-ins for the dry-run (``param_shapes``),
+* logical-axis trees for pjit in/out shardings (``param_axes``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_every: int = 1               # every Nth layer uses MoE FFN (jamba: 2)
+    # attention
+    window: int | None = None        # sliding-window attention (h2o-danube)
+    rope_theta: float = 1e4
+    mrope_sections: tuple[int, ...] | None = None   # qwen2-vl M-RoPE
+    # hybrid / ssm
+    attn_every: int = 0              # jamba: 1 attention layer per this many (0 = all attn)
+    ssm: str | None = None           # "mamba" | "rwkv6"
+    d_state: int = 16
+    d_conv: int = 4
+    ssm_expand: int = 2
+    rwkv_head_dim: int = 64
+    # modality stub
+    frontend: str | None = None      # "audio" (musicgen) | "vision" (qwen2-vl)
+    n_codebooks: int = 1             # musicgen: 4
+    # numerics / structure
+    dtype: str = "bfloat16"
+    scan_layers: bool = True
+    remat: bool = True
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # perf-iteration levers (§Perf variants; defaults = paper-faithful baseline)
+    moe_impl: str = "global"           # global | local (double-scatter) | shmap
+    attn_f32: bool = True              # f32 attention scores/softmax
+    rwkv_bf16: bool = False            # bf16 intra-mixer math in rwkv6
+    rwkv_chunk: int = 32               # wkv chunk length (W traffic ~ linear in it)
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def period(self) -> int:
+        """Layers per scanned group (heterogeneous block period)."""
+        p = 1
+        if self.attn_every:
+            p = self.attn_every
+        if self.n_experts and self.moe_every > 1:
+            p = max(p, self.moe_every)
+        return p
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.period == 0, (self.n_layers, self.period)
+        return self.n_layers // self.period
+
+    def layer_kind(self, pos: int) -> dict[str, Any]:
+        """Mixer/FFN kinds for period position ``pos``."""
+        if self.ssm == "rwkv6":
+            mixer = "rwkv6"
+        elif self.attn_every and (pos % self.attn_every) != self.attn_every // 2:
+            mixer = "mamba"
+        else:
+            mixer = "attn"
+        if self.n_experts and (pos % self.moe_every) == self.moe_every - 1:
+            ffn = "moe"
+        elif self.ssm == "rwkv6":
+            ffn = "rwkv_cmix"
+        else:
+            ffn = "dense"
+        return {"mixer": mixer, "ffn": ffn}
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def n_params(self) -> int:
+        shapes = jax.eval_shape(lambda: param_shapes_concrete(self))
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+    def active_params(self) -> int:
+        """Parameters touched per token (MoE: top-k experts only)."""
+        total = self.n_params()
+        if not self.n_experts:
+            return total
+        shapes = param_specs(self)
+        expert_total = 0
+        for path, spec in shapes.items():
+            if "experts" in spec.axes:
+                expert_total += int(np.prod(spec.shape))
+        return total - expert_total + int(expert_total * self.top_k / self.n_experts)
+
+
+@dataclass(frozen=True)
+class Spec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"     # normal | zeros | ones | small
+    dtype: str | None = None  # override model dtype (e.g. f32 for norms)
+
+
+# ==========================================================================
+# Parameter spec tree
+# ==========================================================================
+
+def _attn_specs(cfg: ModelConfig, g: int) -> dict[str, Spec]:
+    """g = leading group count (stacked scan layers); 0 = unstacked."""
+    D, H, Hk, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    lead = (g,) if g else ()
+    la = ("layers",) if g else ()
+    return {
+        "wq": Spec(lead + (D, H * Dh), la + ("embed", "heads")),
+        "wk": Spec(lead + (D, Hk * Dh), la + ("embed", "kv")),
+        "wv": Spec(lead + (D, Hk * Dh), la + ("embed", "kv")),
+        "wo": Spec(lead + (H * Dh, D), la + ("heads", "embed")),
+    }
+
+
+def _dense_ffn_specs(cfg: ModelConfig, g: int) -> dict[str, Spec]:
+    D, F = cfg.d_model, cfg.d_ff
+    lead = (g,) if g else ()
+    la = ("layers",) if g else ()
+    return {
+        "w_gate": Spec(lead + (D, F), la + ("embed", "ffn")),
+        "w_up": Spec(lead + (D, F), la + ("embed", "ffn")),
+        "w_down": Spec(lead + (F, D), la + ("ffn", "embed")),
+    }
+
+
+def _moe_specs(cfg: ModelConfig, g: int) -> dict[str, Spec]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    lead = (g,) if g else ()
+    la = ("layers",) if g else ()
+    return {
+        "router": Spec(lead + (D, E), la + ("embed", None)),
+        "w_gate": Spec(lead + (E, D, F), la + ("experts", "embed", "ffn")),
+        "w_up": Spec(lead + (E, D, F), la + ("experts", "embed", "ffn")),
+        "w_down": Spec(lead + (E, F, D), la + ("experts", "ffn", "embed")),
+    }
+
+
+def _mamba_specs(cfg: ModelConfig, g: int) -> dict[str, Spec]:
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    S, C = cfg.d_state, cfg.d_conv
+    lead = (g,) if g else ()
+    la = ("layers",) if g else ()
+    dt_rank = max(D // 16, 1)
+    return {
+        "in_proj": Spec(lead + (D, 2 * Di), la + ("embed", "ffn")),
+        "conv_w": Spec(lead + (C, Di), la + (None, "ffn")),
+        "conv_b": Spec(lead + (Di,), la + ("ffn",), init="zeros"),
+        "x_proj": Spec(lead + (Di, dt_rank + 2 * S), la + ("ffn", None)),
+        "dt_proj": Spec(lead + (dt_rank, Di), la + (None, "ffn")),
+        "dt_bias": Spec(lead + (Di,), la + ("ffn",), init="small"),
+        "a_log": Spec(lead + (Di, S), la + ("ffn", None), init="small", dtype="float32"),
+        "d_skip": Spec(lead + (Di,), la + ("ffn",), init="ones", dtype="float32"),
+        "out_proj": Spec(lead + (Di, D), la + ("ffn", "embed")),
+    }
+
+
+def _rwkv_specs(cfg: ModelConfig, g: int) -> dict[str, Spec]:
+    D = cfg.d_model
+    lead = (g,) if g else ()
+    la = ("layers",) if g else ()
+    return {
+        "mix_r": Spec(lead + (D,), la + ("embed",), init="small"),
+        "mix_k": Spec(lead + (D,), la + ("embed",), init="small"),
+        "mix_v": Spec(lead + (D,), la + ("embed",), init="small"),
+        "mix_w": Spec(lead + (D,), la + ("embed",), init="small"),
+        "wr": Spec(lead + (D, D), la + ("embed", "heads")),
+        "wk": Spec(lead + (D, D), la + ("embed", "heads")),
+        "wv": Spec(lead + (D, D), la + ("embed", "heads")),
+        "ww": Spec(lead + (D, D), la + ("embed", "heads")),  # data-dependent decay proj
+        "w_bias": Spec(lead + (D,), la + ("heads",), init="small", dtype="float32"),
+        "u_bonus": Spec(lead + (D,), la + ("heads",), init="small", dtype="float32"),
+        "wo": Spec(lead + (D, D), la + ("heads", "embed")),
+        "g_proj": Spec(lead + (D, D), la + ("embed", "heads")),
+    }
+
+
+def _rwkv_cmix_specs(cfg: ModelConfig, g: int) -> dict[str, Spec]:
+    D, F = cfg.d_model, cfg.d_ff
+    lead = (g,) if g else ()
+    la = ("layers",) if g else ()
+    return {
+        "mix_k": Spec(lead + (D,), la + ("embed",), init="small"),
+        "w_k": Spec(lead + (D, F), la + ("embed", "ffn")),
+        "w_v": Spec(lead + (F, D), la + ("ffn", "embed")),
+    }
+
+
+def block_specs(cfg: ModelConfig) -> dict[str, dict[str, Spec]]:
+    """Specs for one scanned group: per period position, mixer + ffn + norms."""
+    g = cfg.n_groups if cfg.scan_layers else 0
+    out: dict[str, dict[str, Spec]] = {}
+    lead = (g,) if g else ()
+    la = ("layers",) if g else ()
+    for pos in range(cfg.period):
+        kind = cfg.layer_kind(pos)
+        sub: dict[str, Any] = {
+            "norm_mixer": Spec(lead + (cfg.d_model,), la + ("embed",), init="ones", dtype="float32"),
+            "norm_ffn": Spec(lead + (cfg.d_model,), la + ("embed",), init="ones", dtype="float32"),
+        }
+        if kind["mixer"] == "attn":
+            sub["attn"] = _attn_specs(cfg, g)
+        elif kind["mixer"] == "mamba":
+            sub["mamba"] = _mamba_specs(cfg, g)
+        elif kind["mixer"] == "rwkv6":
+            sub["rwkv"] = _rwkv_specs(cfg, g)
+        if kind["ffn"] == "dense":
+            sub["ffn"] = _dense_ffn_specs(cfg, g)
+        elif kind["ffn"] == "moe":
+            sub["moe"] = _moe_specs(cfg, g)
+        elif kind["ffn"] == "rwkv_cmix":
+            sub["cmix"] = _rwkv_cmix_specs(cfg, g)
+        out[f"pos{pos}"] = sub
+    return out
+
+
+def param_specs(cfg: ModelConfig) -> dict[str, Spec]:
+    """Flat ``{'a.b.c': Spec}`` for the whole model."""
+    specs: dict[str, Spec] = {}
+
+    def rec(prefix: str, tree):
+        for k, v in tree.items():
+            path = f"{prefix}.{k}" if prefix else k
+            if isinstance(v, Spec):
+                specs[path] = v
+            else:
+                rec(path, v)
+
+    top: dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        # stub frontend: frame embeddings arrive precomputed; per-codebook
+        # output heads remain
+        top["heads_out"] = Spec((cfg.n_codebooks, cfg.d_model, cfg.vocab_size),
+                                (None, "embed", "vocab"))
+    else:
+        top["embed"] = Spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"))
+        if not cfg.tie_embeddings:
+            top["lm_head"] = Spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    top["final_norm"] = Spec((cfg.d_model,), ("embed",), init="ones", dtype="float32")
+    top["blocks"] = block_specs(cfg)
+    rec("", top)
+    return specs
+
+
+def _unflatten(flat: dict[str, Any]) -> dict[str, Any]:
+    tree: dict[str, Any] = {}
+    for path, v in flat.items():
+        node = tree
+        parts = path.split(".")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def _init_leaf(key, spec: Spec, cfg: ModelConfig):
+    dt = jnp.dtype(spec.dtype) if spec.dtype else cfg.jdtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "small":
+        return (0.01 * jax.random.normal(key, spec.shape, jnp.float32)).astype(dt)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(dt)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    flat = {p: _init_leaf(k, s, cfg) for (p, s), k in zip(specs.items(), keys)}
+    return _unflatten(flat)
+
+
+def param_shapes_concrete(cfg: ModelConfig) -> dict:
+    specs = param_specs(cfg)
+    flat = {p: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype) if s.dtype else cfg.jdtype)
+            for p, s in specs.items()}
+    return _unflatten(flat)
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    specs = param_specs(cfg)
+    return _unflatten({p: s.axes for p, s in specs.items()})
+
+
+# ==========================================================================
+# numerics helpers
+# ==========================================================================
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x (..., S, H, Dh), positions (..., S) int -> rotated x."""
+    Dh = x.shape[-1]
+    freqs = rope_freqs(Dh, theta)                          # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    x1, x2 = x[..., : Dh // 2], x[..., Dh // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: tuple[int, ...]):
+    """Qwen2-VL M-RoPE: positions3 (3, ..., S); head-dim halves split into
+    ``sections`` (temporal/height/width) each rotated by its own stream."""
+    Dh = x.shape[-1]
+    half = Dh // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(Dh, theta)                          # (half,)
+    # build per-frequency position selector
+    sel = []
+    for i, s in enumerate(sections):
+        sel += [i] * s
+    sel = jnp.asarray(sel)                                  # (half,)
+    pos = jnp.take(positions3, sel, axis=0)                 # (half, ..., S)
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)      # (..., S, half)
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def cross_entropy(logits, labels, ignore_id: int = -1):
+    """Mean token cross-entropy in float32; labels == ignore_id are masked."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = lse - ll
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,239 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based sorted dispatch.
+
+TPU adaptation (GShard/Switch style, see DESIGN.md): instead of a CUDA-style
+atomics scatter, tokens are routed with ``top_k`` + sort-free positional
+bucketing (cumsum over a one-hot expert assignment), gathered into a dense
+``(E, capacity, D)`` buffer, processed as batched matmuls on the MXU, and
+combined back with a scatter-add.  Gathers carry no FLOPs in XLA's cost
+model, so the dry-run's HLO FLOPs reflect *active* expert compute
+(≈ tokens × top_k × capacity_factor), keeping the roofline analysis honest
+for MoE architectures.
+
+Capacity drops follow the standard convention: tokens routed beyond
+``capacity = tokens · top_k · capacity_factor / E`` for an expert are
+dropped for that expert (their gate weight is zeroed); the residual stream
+still carries them forward.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+from .common import ModelConfig
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    if cfg.moe_impl == "local":
+        return moe_forward_local(p, x, cfg)
+    if cfg.moe_impl == "shmap":
+        return moe_forward_shmap(p, x, cfg)
+    return moe_forward_global(p, x, cfg)
+
+
+def moe_forward_global(p, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (B, S, D); p: router/w_gate/w_up/w_down (see specs)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * S
+    xt = x.reshape(N, D)
+
+    # --- routing -----------------------------------------------------------
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))    # (N, E)
+    gates, experts = jax.lax.top_k(logits, K)                               # (N, K)
+    gates = jax.nn.softmax(gates, axis=-1)                                  # renorm over top-k
+
+    capacity = int(max(1, round(N * K * cfg.capacity_factor / E)))
+
+    # --- positional bucketing (no atomics): position of token-slot (n, k)
+    # within its expert = number of earlier slots routed to the same expert.
+    flat_expert = experts.reshape(-1)                                       # (N*K,)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)                # (N*K, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)                   # exclusive
+    pos = jnp.take_along_axis(pos_in_expert, flat_expert[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    slot = flat_expert * capacity + jnp.where(keep, pos, 0)                 # (N*K,)
+
+    # --- dispatch: dense (E*capacity, D) buffer ------------------------------
+    buf = jnp.zeros((E * capacity, D), xt.dtype)
+    src = jnp.repeat(xt, K, axis=0)                                         # (N*K, D)
+    src = jnp.where(keep[:, None], src, 0)
+    buf = buf.at[slot].add(src, mode="drop")                                # scatter-add (no FLOP-heavy op)
+    he = buf.reshape(E, capacity, D)
+
+    # --- expert compute (batched SwiGLU on the MXU) --------------------------
+    g = jnp.einsum("ecd,edf->ecf", he, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", he, p["w_up"])
+    hidden = jax.nn.silu(g) * u
+    out_e = jnp.einsum("ecf,efd->ecd", hidden, p["w_down"])                 # (E, cap, D)
+
+    # --- combine: gather slots back, weight by gates, sum over k ------------
+    flat_out = out_e.reshape(E * capacity, D)
+    tok_out = jnp.take(flat_out, slot, axis=0)                              # (N*K, D)
+    w = (gates.reshape(-1) * keep.astype(gates.dtype))[:, None].astype(tok_out.dtype)
+    combined = (tok_out * w).reshape(N, K, D).sum(axis=1)
+    return combined.reshape(B, S, D)
+
+
+def moe_forward_local(p, x, cfg: ModelConfig):
+    """Row-local double-scatter dispatch (§Perf variant "moe_local").
+
+    Iteration log (EXPERIMENTS.md §Perf): the first attempt kept the global
+    formulation's gather-combine; with expert-sharded buffers GSPMD lowers a
+    gather from a sharded operand as a full all-gather of the expert buffers
+    (measured 5x WORSE than baseline).  This formulation uses scatters in
+    BOTH directions — scatter-to-dispatch and scatter-add-to-combine — whose
+    updates and indices are replicated across the model axis (activations are
+    model-replicated between layers), so each model shard masks its local
+    expert range and the only cross-device traffic is the final partial-sum
+    all-reduce of the (B, S, D) output — tokens x d_model, independent of
+    top_k and capacity.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    cap = int(max(1, round(S * K * cfg.capacity_factor / E)))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    gates, experts = jax.lax.top_k(logits, K)                  # (B,S,K)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    flat_e = experts.reshape(B, S * K)                         # (B,S*K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # (B,S*K,E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot             # exclusive, per row
+    pos = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, E * cap)        # E*cap = dropped
+    rows = jnp.arange(B)[:, None]
+
+    # ---- dispatch: scatter token copies into the expert buffer --------------
+    src = jnp.repeat(x, K, axis=1)                             # (B,S*K,D)
+    buf = jnp.zeros((B, E * cap, D), x.dtype)
+    buf = buf.at[rows, slot].add(src, mode="drop")
+    he = constrain(buf.reshape(B, E, cap, D),
+                   ("batch", "experts", None, "act_embed"))
+
+    # ---- expert compute (E sharded over the model axis) ---------------------
+    g = jnp.einsum("becd,edf->becf", he, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", he, p["w_up"])
+    out_e = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, p["w_down"])
+    out_e = constrain(out_e, ("batch", "experts", None, "act_embed"))
+
+    # ---- combine: scatter-add expert outputs back to token positions --------
+    tok_idx = jnp.broadcast_to(jnp.arange(S * K) // K, (B, S * K))
+    w_slot = jnp.zeros((B, E * cap), gates.dtype)
+    w_slot = w_slot.at[rows, slot].add(gates.reshape(B, S * K), mode="drop")
+    tos = jnp.full((B, E * cap), S, jnp.int32)                 # S = dropped sink
+    tos = tos.at[rows, slot].set(tok_idx.astype(jnp.int32), mode="drop")
+    contrib = out_e.reshape(B, E * cap, D) * w_slot[..., None].astype(x.dtype)
+    out = jnp.zeros((B, S + 1, D), x.dtype)
+    out = out.at[rows, tos].add(contrib, mode="drop")
+    return constrain(out[:, :S], ("batch", "seq", "act_embed"))
+
+
+def _positions_by_sort(flat_e):
+    """Position of each token-copy within its expert's arrival order.
+
+    Equivalent to the exclusive one-hot cumsum but WITHOUT materializing the
+    (B, S·K, E) routing tensor (measured ~8e11 bytes/layer for kimi-k2): a
+    stable argsort groups copies by expert, positions are distances to the
+    segment start, then scattered back to arrival order.  O(S·K log S·K)
+    compare traffic, no E factor.
+    """
+    B, SK = flat_e.shape
+    order = jnp.argsort(flat_e, axis=1, stable=True)            # (B,SK)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    idx = jnp.broadcast_to(jnp.arange(SK), (B, SK))
+    is_start = jnp.concatenate(
+        [jnp.ones((B, 1), bool), se[:, 1:] != se[:, :-1]], axis=1)
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, idx, 0), axis=1)
+    pos_sorted = idx - seg_start
+    pos = jnp.zeros_like(flat_e)
+    rows = jnp.arange(B)[:, None]
+    return pos.at[rows, order].set(pos_sorted)
+
+
+def _bucketed_expert_math(x, router, w_gate, w_up, w_down, cfg: ModelConfig,
+                          e_lo, E_loc):
+    """Local math shared by the shard_map body and its meshless fallback:
+    route over ALL experts, keep only the local range [e_lo, e_lo+E_loc),
+    bucket per batch row, compute, scatter-add back (partial output)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    cap = int(max(1, round(S * K * cfg.capacity_factor / E)))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    gates, experts = jax.lax.top_k(logits, K)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    flat_e = experts.reshape(B, S * K)
+    pos = _positions_by_sort(flat_e)
+    local = (flat_e >= e_lo) & (flat_e < e_lo + E_loc)
+    keep = (pos < cap) & local
+    slot = jnp.where(keep, (flat_e - e_lo) * cap + pos, E_loc * cap)
+    rows = jnp.arange(B)[:, None]
+
+    src = jnp.repeat(x, K, axis=1)
+    buf = jnp.zeros((B, E_loc * cap, D), x.dtype)
+    buf = buf.at[rows, slot].add(src, mode="drop")
+    he = buf.reshape(B, E_loc, cap, D)
+
+    g = jnp.einsum("becd,edf->becf", he, w_gate)
+    u = jnp.einsum("becd,edf->becf", he, w_up)
+    out_e = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, w_down)
+
+    tok_idx = jnp.broadcast_to(jnp.arange(S * K) // K, (B, S * K)).astype(jnp.int32)
+    w_slot = jnp.zeros((B, E_loc * cap), gates.dtype)
+    w_slot = w_slot.at[rows, slot].add(gates.reshape(B, S * K), mode="drop")
+    tos = jnp.full((B, E_loc * cap), S, jnp.int32)
+    tos = tos.at[rows, slot].set(tok_idx, mode="drop")
+    contrib = out_e.reshape(B, E_loc * cap, D) * w_slot[..., None].astype(x.dtype)
+    out = jnp.zeros((B, S + 1, D), x.dtype)
+    out = out.at[rows, tos].add(contrib, mode="drop")
+    return out[:, :S]
+
+
+def moe_forward_shmap(p, x, cfg: ModelConfig):
+    """Explicit expert parallelism via shard_map (§Perf variant "moe_shmap").
+
+    Activations between layers are replicated across the model axis, so every
+    model rank can route all tokens locally, process the experts it owns, and
+    contribute a partial (B, S, D) output — combined with ONE psum over the
+    model axis.  Collective cost per layer: exactly one all-reduce of
+    tokens × d_model, independent of top_k, capacity factor and expert count
+    (vs. GSPMD's gather/scatter lowering, which all-reduces whole expert
+    buffers in the backward pass — measured 5x worse than even the global
+    baseline; see EXPERIMENTS.md §Perf).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import current_rules
+
+    rules = current_rules()
+    E = cfg.n_experts
+    if rules is None or "model" not in rules.mesh.shape or E % rules.mesh.shape["model"]:
+        return _bucketed_expert_math(x, p["router"], p["w_gate"], p["w_up"],
+                                     p["w_down"], cfg, 0, E)
+
+    mesh = rules.mesh
+    M = mesh.shape["model"]
+    E_loc = E // M
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    x_spec = P(dp_axes, None, None)
+    w_spec = P("model", None, None)
+
+    def body(x_l, router, wg, wu, wd):
+        idx = jax.lax.axis_index("model")
+        e_lo = idx * E_loc
+        out = _bucketed_expert_math(x_l, router, wg, wu, wd, cfg, e_lo, E_loc)
+        return jax.lax.psum(out, "model")
+
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
+                   out_specs=x_spec, check_rep=False)
+    return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])

@@ -1,0 +1,3 @@
+from .adamw import OptConfig, adamw_init, adamw_update, opt_state_axes
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "opt_state_axes"]

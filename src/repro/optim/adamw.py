@@ -1,0 +1,79 @@
+"""AdamW with fully-sharded optimizer state.
+
+Moments inherit each parameter's logical axes, so under the FSDP rule
+("embed" -> "data") the optimizer state is ZeRO-sharded across the data axis
+with zero extra code.  ``moment_dtype='bfloat16'`` halves optimizer-state
+bytes AND the reduce-scatter volume of the update (the gradient-compression
+lever used in §Perf).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"     # "bfloat16" = compressed moments
+    warmup_steps: int = 100
+
+
+def adamw_init(params, cfg: OptConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_axes(axes_tree):
+    """Logical axes for the optimizer state (mirrors the parameter axes)."""
+    return {"m": axes_tree, "v": axes_tree, "step": ()}
+
+
+def _schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def adamw_update(grads, opt_state, params, cfg: OptConfig):
+    step = opt_state["step"] + 1
+    # global-norm clip (f32)
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = _schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mh = mf / bc1
+        vh = vf / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mf.astype(mdt), vf.astype(mdt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    params2 = jax.tree.unflatten(tdef, [n[0] for n in new])
+    m2 = jax.tree.unflatten(tdef, [n[1] for n in new])
+    v2 = jax.tree.unflatten(tdef, [n[2] for n in new])
+    return params2, {"m": m2, "v": v2, "step": step}, {"grad_norm": gnorm, "lr": lr}

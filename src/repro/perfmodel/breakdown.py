@@ -1,0 +1,124 @@
+"""Per-op breakdown of trip-count-weighted bytes/flops/collectives.
+
+The hillclimbing profiler: given a compiled module's text, attribute bytes
+and collective traffic to op types (weighted by loop trip counts) so the
+dominant-term hypotheses are grounded in the actual lowered program rather
+than guesses.  ``python -m repro.perfmodel.breakdown <arch> <shape>`` re-lowers
+a cell and prints the top contributors.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+
+from .hlo import (_CALLS_RE, _FREE_OPS, _INSTR_RE, _TRIP_RE, _operands_of,
+                  _type_bytes, COLLECTIVE_OPS)
+
+
+def breakdown(hlo_text: str):
+    lines = hlo_text.splitlines()
+    comps: dict[str, list] = {}
+    sizes: dict[str, dict[str, int]] = {}
+    per_comp: dict[str, dict[str, float]] = defaultdict(lambda: defaultdict(float))
+    per_comp_coll: dict[str, dict[str, float]] = defaultdict(lambda: defaultdict(float))
+    fusion_subs: dict[str, set] = defaultdict(set)
+    entry = None
+    cur = None
+    for line in lines:
+        if line and not line[0].isspace() and line.rstrip().endswith("{") and ") -> " in line:
+            tok = line.split()
+            name = (tok[1] if tok[0] == "ENTRY" else tok[0]).lstrip("%")
+            cur = name
+            comps[cur] = []
+            sizes[cur] = {}
+            if tok[0] == "ENTRY":
+                entry = cur
+            continue
+        if cur is None or not line.strip() or line.strip() == "}":
+            if line.strip() == "}":
+                cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        sizes[cur][name] = _type_bytes(type_str)
+        if op == "while":
+            trip = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            for sub in _CALLS_RE.findall(line):
+                comps[cur].append((sub, trip, False))
+            continue
+        for sub in _CALLS_RE.findall(line):
+            comps[cur].append((sub, 1, op == "fusion"))
+        base = op[:-6] if op.endswith("-start") else op
+        if not op.endswith("-done") and base in COLLECTIVE_OPS:
+            b = sum(sizes[cur].get(o, 0) for o in _operands_of(line, op)) or sizes[cur][name]
+            per_comp_coll[cur][base] += b
+        if op in _FREE_OPS or op.endswith("-done"):
+            continue
+        if op == "dynamic-update-slice":
+            ops_ = _operands_of(line, op)
+            b = 2 * sizes[cur].get(ops_[1], 0) if len(ops_) > 1 else 0
+        elif op == "dynamic-slice":
+            b = 2 * sizes[cur][name]
+        else:
+            b = sizes[cur][name] + sum(sizes[cur].get(o, 0) for o in _operands_of(line, op))
+        per_comp[cur][op] += b
+
+    bytes_by_op: dict[str, float] = defaultdict(float)
+    coll_by_comp: dict[str, float] = defaultdict(float)
+    stack: set = set()
+
+    def walk(name, mult, in_fusion):
+        if name in stack or name not in comps:
+            return
+        stack.add(name)
+        if not in_fusion:
+            for op, b in per_comp[name].items():
+                bytes_by_op[op] += b * mult
+        for op, b in per_comp_coll[name].items():
+            coll_by_comp[f"{name}:{op}"] += b * mult
+        for sub, m, via_f in comps[name]:
+            walk(sub, mult * m, in_fusion or via_f)
+        stack.discard(name)
+
+    walk(entry, 1.0, False)
+    return dict(bytes_by_op), dict(coll_by_comp)
+
+
+def main():
+    import argparse
+    import os
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    import jax  # noqa: F401
+    from repro.configs import SHAPES, get_config, apply_variants
+    from repro.distributed.sharding import axis_rules
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import make_cell, lower_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--variants", default="")
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.variants:
+        cfg = apply_variants(cfg, args.variants.split(","))
+    mesh = make_production_mesh()
+    with mesh, axis_rules(mesh):
+        compiled = lower_cell(make_cell(cfg, SHAPES[args.shape])).compile()
+    by_op, coll = breakdown(compiled.as_text())
+    print(f"== bytes by op (top {args.top}) ==")
+    for op, b in sorted(by_op.items(), key=lambda kv: -kv[1])[:args.top]:
+        print(f"  {b:12.3e}  {op}")
+    print("== collective bytes by computation ==")
+    for k, b in sorted(coll.items(), key=lambda kv: -kv[1])[:args.top]:
+        print(f"  {b:12.3e}  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Three-term roofline model over the dry-run's compiled artifact.
+
+Hardware constants are the task-spec TPU v5e-class numbers:
+  * 197 TFLOP/s bf16 per chip
+  * 819 GB/s HBM bandwidth per chip
+  * ~50 GB/s per ICI link
+  * 16 GiB HBM per chip (fit criterion, reported not enforced)
+
+Terms (seconds, per step, per chip — the per-device program's numbers):
+  compute    = HLO_FLOPs / peak_FLOPs
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / link_bw
+
+MODEL_FLOPS uses the 6·N·D convention (6·N_active·D for MoE) so the
+useful-compute ratio exposes remat/dispatch overheads.
+"""
+
+from __future__ import annotations
+
+from repro.configs import ShapeSpec
+from repro.models.common import ModelConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+HBM_BYTES = 16 * 2 ** 30     # v5e-class chip
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); backward included for training."""
+    n = cfg.active_params() if cfg.n_experts else cfg.n_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_terms(*, cfg: ModelConfig, shape: ShapeSpec, n_chips: int,
+                   flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float) -> dict:
+    t_compute = flops_per_device / PEAK_FLOPS
+    t_memory = bytes_per_device / HBM_BW
+    t_collective = collective_bytes_per_device / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_collective)
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_per_device * n_chips
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "step_lower_bound_s": bound,
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_flops_ratio": (mf / hlo_global) if hlo_global else 0.0,
+        "roofline_fraction": (mf / n_chips / PEAK_FLOPS) / bound if bound else 0.0,
+        "hw": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW,
+               "hbm_bytes": HBM_BYTES, "chips": n_chips},
+    }

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step on
+CPU, asserting output shapes and finiteness (no NaNs)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import applicable_shapes, get_config, get_smoke_config, list_archs
+from repro.models import transformer as T
+from repro.models.common import init_params
+
+B, S = 2, 64
+
+
+def _batch(cfg, key):
+    if cfg.frontend == "audio":
+        return {
+            "embeddings": jax.random.normal(key, (B, S, cfg.d_model), jnp.float32) * 0.1,
+            "labels": jax.random.randint(key, (B, S, cfg.n_codebooks), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    logits = T.forward(params, cfg, batch)
+    if cfg.frontend == "audio":
+        assert logits.shape == (B, S, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    # one SGD step: loss decreases-or-stays-sane and grads are finite
+    loss, grads = jax.value_and_grad(lambda p: T.loss_fn(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+    params2 = jax.tree.map(lambda p, g: p - 0.05 * g.astype(p.dtype), params, grads)
+    loss2 = T.loss_fn(params2, cfg, batch)
+    assert np.isfinite(float(loss2))
+    assert float(loss2) < float(loss) + 1.0  # no blow-up
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = T.init_cache(cfg, B, 32)
+    b1 = ({"embeddings": jnp.ones((B, 1, cfg.d_model), jnp.float32) * 0.05}
+          if cfg.frontend == "audio" else {"tokens": jnp.ones((B, 1), jnp.int32)})
+    logits, cache2 = T.decode_step(params, cfg, cache, b1, jnp.int32(0))
+    if cfg.frontend == "audio":
+        assert logits.shape == (B, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "h2o-danube-3-4b", "qwen3-moe-235b-a22b",
+                                  "jamba-v0.1-52b", "rwkv6-1.6b", "musicgen-medium",
+                                  "qwen2-vl-72b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token cached decode reproduces full-sequence logits."""
+    cfg = get_smoke_config(arch)
+    if cfg.n_experts:  # disable capacity drops (batch-size dependent)
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(42)
+    S_dec = 20
+    if cfg.frontend == "audio":
+        emb = jax.random.normal(key, (B, S_dec, cfg.d_model), jnp.float32) * 0.1
+        batch = {"embeddings": emb}
+    else:
+        toks = jax.random.randint(key, (B, S_dec), 0, cfg.vocab_size)
+        batch = {"tokens": toks}
+    full = T.forward(params, cfg, batch)
+    cache = T.init_cache(cfg, B, S_dec)
+    step = jax.jit(lambda c, b, i: T.decode_step(params, cfg, c, b, i))
+    worst = 0.0
+    for t in range(S_dec):
+        b1 = ({"embeddings": emb[:, t:t + 1]} if cfg.frontend == "audio"
+              else {"tokens": toks[:, t:t + 1]})
+        logits, cache = step(cache, b1, jnp.int32(t))
+        worst = max(worst, float(jnp.max(jnp.abs(logits - full[:, t]))))
+    assert worst < 2e-2, worst
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_full_config_matches_assignment(arch):
+    """The full (dry-run) configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936, 128, 8),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840, 384, 8),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000, 0, 0),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152, 0, 0),
+        "yi-9b": (48, 4096, 32, 4, 11008, 64000, 0, 0),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400, 0, 0),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536, 16, 2),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536, 0, 0),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048, 0, 0),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064, 0, 0),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab_size, cfg.n_experts, cfg.top_k)
+    assert got == expected
+    shapes = applicable_shapes(cfg)
+    if arch in ("rwkv6-1.6b", "jamba-v0.1-52b", "h2o-danube-3-4b"):
+        assert "long_500k" in shapes
+    else:
+        assert "long_500k" not in shapes

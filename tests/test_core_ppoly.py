@@ -1,0 +1,138 @@
+"""Unit + property tests for the exact piecewise-polynomial algebra."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ppoly import PPoly, poly_compose, poly_eval, poly_shift
+
+
+# ---------------------------------------------------------------- helpers --
+@st.composite
+def monotone_pwlinear(draw, max_pieces=5, x_hi=100.0, y_hi=1000.0):
+    n = draw(st.integers(2, max_pieces + 1))
+    xs = sorted(draw(st.lists(st.floats(0.1, x_hi), min_size=n, max_size=n, unique=True)))
+    xs = [0.0] + xs
+    ys = np.cumsum([0.0] + [draw(st.floats(0.0, y_hi / n)) for _ in range(n)])
+    return PPoly.pwlinear(np.array(xs), ys)
+
+
+@st.composite
+def random_poly_piece(draw):
+    deg = draw(st.integers(0, 3))
+    return np.array([draw(st.floats(-10, 10)) for _ in range(deg + 1)])
+
+
+# ---------------------------------------------------------------- plain poly --
+@given(random_poly_piece(), st.floats(-5, 5), st.floats(-5, 5))
+@settings(max_examples=100, deadline=None)
+def test_poly_shift_identity(c, d, u):
+    assert poly_eval(poly_shift(c, d), u) == pytest.approx(poly_eval(c, u + d), rel=1e-6, abs=1e-6)
+
+
+@given(random_poly_piece(), random_poly_piece(), st.floats(-3, 3))
+@settings(max_examples=100, deadline=None)
+def test_poly_compose_matches_pointwise(outer, inner, u):
+    comp = poly_compose(outer, inner)
+    assert poly_eval(comp, u) == pytest.approx(
+        poly_eval(outer, poly_eval(inner, u)), rel=1e-5, abs=1e-4)
+
+
+# ---------------------------------------------------------------- calculus --
+@given(monotone_pwlinear())
+@settings(max_examples=50, deadline=None)
+def test_antiderivative_inverts_derivative(f):
+    F = f.derivative().antiderivative(float(f(f.starts[0])))
+    ts = np.linspace(float(f.starts[0]), float(f.starts[-1]) + 10, 97)
+    # antiderivative is continuous; equality holds where f is continuous
+    assert np.allclose(F(ts), f(ts), atol=1e-6 * max(1.0, float(np.max(np.abs(f(ts))))))
+
+
+def test_integrate():
+    f = PPoly.pwlinear([0, 10], [0, 100])  # slope 10 then flat
+    assert f.integrate(0, 10) == pytest.approx(500.0)
+    assert f.integrate(10, 20) == pytest.approx(1000.0)
+
+
+# ---------------------------------------------------------------- algebra --
+@given(monotone_pwlinear(), monotone_pwlinear())
+@settings(max_examples=50, deadline=None)
+def test_add_sub_pointwise(f, g):
+    ts = np.linspace(0, 120, 241)
+    assert np.allclose((f + g)(ts), f(ts) + g(ts), rtol=1e-9, atol=1e-6)
+    assert np.allclose((f - g)(ts), f(ts) - g(ts), rtol=1e-9, atol=1e-6)
+    assert np.allclose((f * 2.5)(ts), 2.5 * f(ts), rtol=1e-12)
+
+
+@given(st.lists(monotone_pwlinear(), min_size=2, max_size=4))
+@settings(max_examples=50, deadline=None)
+def test_minimum_pointwise_and_attribution(fns):
+    m, seg = PPoly.minimum(fns)
+    ts = np.linspace(0.05, 120, 173)
+    ref = np.min(np.stack([f(ts) for f in fns]), axis=0)
+    assert np.allclose(m(ts), ref, rtol=1e-7, atol=1e-6 * max(1.0, float(np.max(np.abs(ref)))))
+    # attribution: on each segment the named function equals the min
+    for i, (s, idx) in enumerate(seg):
+        e = seg[i + 1][0] if i + 1 < len(seg) else s + 10.0
+        mid = 0.5 * (s + e)
+        assert fns[idx](mid) == pytest.approx(float(m(mid)), rel=1e-6, abs=1e-6)
+
+
+@given(monotone_pwlinear(), monotone_pwlinear())
+@settings(max_examples=50, deadline=None)
+def test_compose_pointwise(outer, inner):
+    c = PPoly.compose(outer, inner)
+    ts = np.linspace(0, 120, 241)
+    ref = outer(inner(ts))
+    assert np.allclose(c(ts), ref, rtol=1e-6, atol=1e-5 * max(1.0, float(np.max(np.abs(ref)))))
+
+
+def test_compose_burst_step():
+    R = PPoly.step([0, 100], [0, 1000])
+    I = PPoly.linear(0.0, 10.0)
+    P = PPoly.compose(R, I)
+    assert P(9.99) == 0.0
+    assert P(10.0) == 1000.0
+
+
+# ---------------------------------------------------------------- queries --
+@given(monotone_pwlinear(), st.floats(0, 900))
+@settings(max_examples=80, deadline=None)
+def test_first_time_at_or_above(f, y):
+    t = f.first_time_at_or_above(y, 0.0)
+    if np.isfinite(t):
+        assert f(t) >= y - 1e-6 * max(1.0, y)
+        if t > 1e-6:
+            assert f(t - 1e-6) <= y + 1e-5 * max(1.0, y)
+    else:
+        assert f.sup() < y
+
+
+@given(monotone_pwlinear())
+@settings(max_examples=50, deadline=None)
+def test_pseudo_inverse_roundtrip(f):
+    g = f.pseudo_inverse()
+    ys = np.linspace(float(f(0.0)) + 1e-6, float(f.sup()) - 1e-6, 37)
+    for y in ys:
+        t = float(g(y))
+        assert f(t) >= y - 1e-5 * max(1.0, abs(y))
+
+
+def test_inv_at_burst_semantics():
+    burst = PPoly.step([0, 100], [0, 1000])
+    assert burst.inv_at(0.0) == 0.0
+    assert burst.inv_at(500.0) == 100.0
+    assert burst.inv_at(1000.0) == 100.0
+
+
+def test_restrict_and_simplify():
+    f = PPoly.pwlinear([0, 10, 20], [0, 100, 100])
+    r = f.restrict(5.0)
+    assert r.starts[0] == 5.0 and r(5.0) == pytest.approx(50.0) and r(12) == pytest.approx(100.0)
+    ff = f.refine_starts(np.array([3.0, 7.0]))
+    assert ff.n_pieces == 5 and ff.simplify().n_pieces == 2
+
+
+def test_monotonicity_check():
+    assert PPoly.pwlinear([0, 1], [0, 1]).is_monotone_nondecreasing()
+    assert not PPoly.pwlinear([0, 1, 2], [0, 1, 0.5]).is_monotone_nondecreasing()

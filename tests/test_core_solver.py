@@ -1,0 +1,231 @@
+"""Solver tests: hand-computed cases + property tests vs the numeric oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DataDep, PPoly, Process, ResourceDep, solve, solve_alg1, solve_euler
+
+N = 1000.0
+
+
+def dl_process():
+    return Process("dl", data={"file": DataDep.stream(N, N)},
+                   resources={"link": ResourceDep.stream(N, N)},
+                   total_progress=N).identity_output()
+
+
+# ------------------------------------------------------------ hand-computed --
+def test_constant_rate():
+    r = solve(dl_process(), {"file": PPoly.constant(N)}, {"link": PPoly.constant(10.0)})
+    assert r.finish_time == pytest.approx(100.0)
+    assert r.progress(50.0) == pytest.approx(500.0)
+    assert r.progress(150.0) == pytest.approx(N)  # clamped after completion
+    assert r.segments[0].kind == "resource" and r.segments[0].name == "link"
+
+
+def test_burst_consumer_chain():
+    r = solve(dl_process(), {"file": PPoly.constant(N)}, {"link": PPoly.constant(10.0)})
+    rev = Process("rev", data={"in": DataDep.burst(N, 500.0)},
+                  resources={"cpu": ResourceDep.stream(50.0, 500.0)},
+                  total_progress=500.0).identity_output()
+    r2 = solve(rev, {"in": r.output_function()}, {"cpu": PPoly.constant(1.0)})
+    assert r2.finish_time == pytest.approx(150.0)  # dl 100 s + cpu 50 s
+    assert r2.progress(99.9) == 0.0
+    kinds = [(s.kind, s.name) for s in r2.segments]
+    assert ("data", "in") in kinds and ("resource", "cpu") in kinds
+
+
+def test_stream_consumer_is_data_limited():
+    r = solve(dl_process(), {"file": PPoly.constant(N)}, {"link": PPoly.constant(10.0)})
+    rot = Process("rot", data={"in": DataDep.stream(N, N)},
+                  resources={"cpu": ResourceDep.stream(5.0, N)},
+                  total_progress=N).identity_output()
+    r3 = solve(rot, {"in": r.output_function()}, {"cpu": PPoly.constant(1.0)})
+    assert r3.finish_time == pytest.approx(100.0)
+    assert r3.segments[-1].kind == "data"
+
+
+def test_rate_change():
+    r = solve(dl_process(), {"file": PPoly.constant(N)},
+              {"link": PPoly.step([0, 50], [5.0, 20.0])})
+    assert r.finish_time == pytest.approx(87.5)  # 250 by t=50, 750 at 20/s
+
+
+def test_starvation_window():
+    r = solve(dl_process(), {"file": PPoly.constant(N)},
+              {"link": PPoly.step([0, 10, 20], [10.0, 0.0, 10.0])})
+    assert r.finish_time == pytest.approx(110.0)
+    assert r.progress(15.0) == pytest.approx(100.0)  # flat during starvation
+
+
+def test_burst_resource_start():
+    p = Process("b", data={"in": DataDep.stream(N, N)},
+                resources={"cpu": ResourceDep.burst_at(0.0, 30.0, N)},
+                total_progress=N).identity_output()
+    r = solve(p, {"in": PPoly.constant(N)}, {"cpu": PPoly.constant(1.0)})
+    assert r.finish_time == pytest.approx(30.0, abs=1e-4)
+
+
+def test_burst_resource_mid_progress():
+    rr = PPoly(np.array([0.0, 500.0]), [np.array([0.0, 0.05]), np.array([45.0, 0.05])])
+    p = Process("mb", data={"in": DataDep.stream(N, N)},
+                resources={"cpu": ResourceDep(rr)}, total_progress=N).identity_output()
+    r = solve(p, {"in": PPoly.constant(N)}, {"cpu": PPoly.constant(1.0)})
+    # 500 at 20/s = 25 s, absorb 20 cpu-s, 500 more = 25 s
+    assert r.finish_time == pytest.approx(70.0, abs=1e-4)
+
+
+def test_no_banking_of_unused_resource():
+    # data trickles (slope 1) until t=10, then everything is available;
+    # resource rate 10: progress must NOT bank the unused resource.
+    p = Process("bank", data={"in": DataDep.stream(N, N)},
+                resources={"r": ResourceDep.stream(N, N)},
+                total_progress=N).identity_output()
+    din = {"in": PPoly(np.array([0.0, 10.0]), [np.array([0.0, 1.0]), np.array([1000.0])])}
+    r = solve(p, din, {"r": PPoly.constant(10.0)})
+    assert r.finish_time == pytest.approx(109.0)
+
+
+def test_metrics_eq7_eq8():
+    r = solve(dl_process(), {"file": PPoly.constant(N)}, {"link": PPoly.constant(10.0)})
+    rev = Process("rev", data={"in": DataDep.burst(N, 500.0)},
+                  resources={"cpu": ResourceDep.stream(50.0, 500.0)},
+                  total_progress=500.0).identity_output()
+    r2 = solve(rev, {"in": r.output_function()}, {"cpu": PPoly.constant(1.0)})
+    ts = np.linspace(0, 149, 331)
+    ru = r2.relative_resource_usage("cpu", ts)
+    assert np.nanmax(ru) <= 1.0 + 1e-9  # paper: >1 indicates an implementation bug
+    bd = r2.buffered_data("in", np.array([50.0, 99.0, 120.0]))
+    assert bd[0] == pytest.approx(500.0) and bd[1] == pytest.approx(990.0)
+    assert bd[2] == pytest.approx(0.0, abs=1e-6)
+
+
+def test_unconstrained_process_jumps_to_ceiling():
+    p = Process("free", data={"in": DataDep.stream(N, N)}, resources={},
+                total_progress=N).identity_output()
+    din = {"in": PPoly.pwlinear([0, 10], [0, N])}
+    r = solve(p, din, {})
+    assert r.finish_time == pytest.approx(10.0)
+    assert r.progress(5.0) == pytest.approx(N / 2)
+
+
+# ------------------------------------------------------------ property tests --
+@st.composite
+def random_instance(draw):
+    """Random monotone piecewise-linear instance (continuous R_R)."""
+    n_res = draw(st.integers(1, 3))
+    # data input: monotone pw-linear reaching N
+    k = draw(st.integers(1, 3))
+    xs = sorted(draw(st.lists(st.floats(1.0, 80.0), min_size=k, max_size=k, unique=True)))
+    ys = np.linspace(0, N, k + 1)
+    din = PPoly.pwlinear(np.array([0.0] + xs), ys)
+    resources = {}
+    rins = {}
+    for i in range(n_res):
+        # continuous pw-linear requirement over progress
+        m = draw(st.integers(1, 3))
+        ps = np.linspace(0, N, m + 1)
+        slopes = [draw(st.floats(0.01, 0.2)) for _ in range(m)]
+        vals = np.concatenate([[0.0], np.cumsum(np.diff(ps) * np.array(slopes))])
+        resources[f"r{i}"] = ResourceDep(PPoly.pwlinear(ps, vals))
+        # piecewise-constant allocation
+        nseg = draw(st.integers(1, 3))
+        ts = [0.0] + sorted(draw(st.lists(st.floats(1.0, 60.0), min_size=nseg - 1,
+                                          max_size=nseg - 1, unique=True)))
+        rates = [draw(st.floats(0.5, 5.0)) for _ in range(nseg)]
+        rins[f"r{i}"] = PPoly.step(np.array(ts), np.array(rates))
+    proc = Process("x", data={"in": DataDep.stream(N, N)}, resources=resources,
+                   total_progress=N).identity_output()
+    return proc, {"in": din}, rins
+
+
+@given(random_instance())
+@settings(max_examples=25, deadline=None)
+def test_exact_matches_euler_oracle(inst):
+    proc, din, rin = inst
+    r = solve(proc, din, rin)
+    t_end = min(r.finish_time * 1.5 if np.isfinite(r.finish_time) else 2000.0, 4000.0)
+    ts, ps, fin = solve_euler(proc, din, rin, t_end=t_end, dt=t_end / 40000)
+    if np.isfinite(r.finish_time) and np.isfinite(fin):
+        assert r.finish_time == pytest.approx(fin, rel=0.01, abs=0.05)
+    dev = np.max(np.abs(ps - r.progress(ts)))
+    assert dev <= 0.01 * N
+
+
+@st.composite
+def single_slope_instance(draw):
+    """Instance whose resource requirements have a single slope — Algorithm 1
+    converges in a couple of sweeps here (rates don't depend on progress)."""
+    n_res = draw(st.integers(1, 3))
+    k = draw(st.integers(1, 3))
+    xs = sorted(draw(st.lists(st.floats(1.0, 80.0), min_size=k, max_size=k, unique=True)))
+    din = PPoly.pwlinear(np.array([0.0] + xs), np.linspace(0, N, k + 1))
+    resources, rins = {}, {}
+    for i in range(n_res):
+        slope = draw(st.floats(0.01, 0.2))
+        resources[f"r{i}"] = ResourceDep(PPoly.linear(0.0, slope))
+        nseg = draw(st.integers(1, 3))
+        ts = [0.0] + sorted(draw(st.lists(st.floats(1.0, 60.0), min_size=nseg - 1,
+                                          max_size=nseg - 1, unique=True)))
+        rates = [draw(st.floats(0.5, 5.0)) for _ in range(nseg)]
+        rins[f"r{i}"] = PPoly.step(np.array(ts), np.array(rates))
+    proc = Process("x", data={"in": DataDep.stream(N, N)}, resources=resources,
+                   total_progress=N).identity_output()
+    return proc, {"in": din}, rins
+
+
+@given(single_slope_instance())
+@settings(max_examples=15, deadline=None)
+def test_alg1_converges_to_same_fixed_point(inst):
+    proc, din, rin = inst
+    r = solve(proc, din, rin)
+    t_end = min(r.finish_time * 1.5 if np.isfinite(r.finish_time) else 2000.0, 4000.0)
+    ts, P, iters = solve_alg1(proc, din, rin, t_end=t_end, dt=t_end / 20000)
+    assert np.max(np.abs(P - r.progress(ts))) <= 0.02 * N
+    assert iters < 50  # paper: guaranteed progress of the iteration
+
+
+def test_alg1_slow_convergence_motivates_alg2():
+    """Paper Sect. 3.2: Algorithm 1 "may iterate over every t, which is not
+    tractable".  A two-slope resource makes the correction point t_x crawl
+    forward a little per sweep, while Algorithm 2 solves the same instance in
+    a handful of events — the exact contrast that motivates Algorithm 2."""
+    din = PPoly.pwlinear([0.0, 12.9], [0.0, N])
+    R = PPoly.pwlinear([0, 500, 1000], [0, 500 * 0.19, 500 * 0.19 + 500 * 0.011])
+    proc = Process("x", data={"in": DataDep.stream(N, N)},
+                   resources={"r0": ResourceDep(R)}, total_progress=N).identity_output()
+    rin = {"r0": PPoly.constant(3.9)}
+    r = solve(proc, {"in": din}, rin)
+    assert r.iterations <= 10  # Algorithm 2: a handful of events
+    t_end = r.finish_time * 1.5
+    ts, P, iters_few = solve_alg1(proc, {"in": din}, rin, t_end=t_end,
+                                  dt=t_end / 8000, max_iter=8)
+    dev_few = np.max(np.abs(P - r.progress(ts)))
+    ts, P, iters_many = solve_alg1(proc, {"in": din}, rin, t_end=t_end,
+                                   dt=t_end / 8000, max_iter=2000)
+    dev_many = np.max(np.abs(P - r.progress(ts)))
+    assert dev_many <= 0.02 * N          # eventually reaches the fixed point
+    assert dev_many < dev_few            # ... but only slowly
+    assert iters_many > 50               # many sweeps needed (intractability)
+
+
+@given(random_instance())
+@settings(max_examples=25, deadline=None)
+def test_invariants(inst):
+    proc, din, rin = inst
+    r = solve(proc, din, rin)
+    ts = np.linspace(0.0, (r.finish_time if np.isfinite(r.finish_time) else 500.0) + 5.0, 401)
+    ps = r.progress(ts)
+    # monotone non-decreasing
+    assert np.all(np.diff(ps) >= -1e-6 * N)
+    # never above the data ceiling
+    assert np.all(ps <= r.data_progress(ts) + 1e-6 * N)
+    # eq. (7) resource usage <= 1
+    for l in proc.resources:
+        ru = r.relative_resource_usage(l, ts)
+        assert np.nanmax(ru) <= 1.0 + 1e-6
+    # eq. (8) buffered data >= 0
+    for k in proc.data:
+        bd = r.buffered_data(k, ts)
+        assert np.min(bd) >= -1e-5 * N

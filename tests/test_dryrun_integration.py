@@ -1,0 +1,47 @@
+"""Integration: the dry-run pipeline end-to-end on a small cell.
+
+Runs ``repro.launch.dryrun`` as a subprocess (it must own jax initialization
+to force 512 host devices) for the cheapest cell and checks the emitted JSON
+contract every downstream consumer (roofline report, step model) relies on.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_dryrun_cell_end_to_end(tmp_path):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", "rwkv6-1.6b", "--shape", "decode_32k",
+           "--mesh", "single", "--out", str(tmp_path)]
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+    env.update({k: v for k, v in os.environ.items()
+                if k not in ("XLA_FLAGS", "PYTHONPATH")})
+    env["PYTHONPATH"] = str(ROOT / "src")
+    res = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                         env=env, cwd=str(ROOT))
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+
+    rec = json.loads((tmp_path / "rwkv6-1.6b_decode_32k_single.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    per = rec["per_device"]
+    assert per["flops"] > 0 and per["bytes"] > 0
+    rr = rec["roofline"]
+    for k in ("compute_s", "memory_s", "collective_s", "dominant",
+              "useful_flops_ratio", "roofline_fraction"):
+        assert k in rr
+    assert rr["dominant"] in ("compute", "memory", "collective")
+    # decode is memory-bound (weight/state streaming)
+    assert rr["dominant"] == "memory"
+    # the step model consumes the record directly
+    from repro.perfmodel.stepmodel import from_dryrun_record, predict
+    p = predict(from_dryrun_record(rec, n_steps=10, data_rate_steps_per_s=1e6))
+    assert p.step_time_s > 0
