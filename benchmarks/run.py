@@ -3,7 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
 
 * Fig. 4  — single-process progress/bottleneck example
-* Fig. 7  — 600-prioritization sweep, predictions vs DES ground truth
+* Fig. 7  — 600-prioritization sweep (one batched ``repro.sweep`` pass),
+            predictions vs DES ground truth
+* sweep   — batched engine vs looped scalar solver, us/scenario at B=600
 * Fig. 8  — bottleneck structure at 50 % / 95 %
 * Sect. 6 — analysis runtime: BottleMod vs discrete-event simulation,
             1.1 GB vs 100 GB input (the headline scaling claim)
@@ -57,25 +59,58 @@ def bench_fig4_example():
 
 
 def bench_fig7_sweep():
-    from repro.configs.paper_workflow import measure_makespan, predict_makespan
+    """Fig. 7's 600 prioritizations, evaluated as ONE batched sweep."""
+    from repro import sweep
+    from repro.configs.paper_workflow import (
+        build_workflow, measure_makespan, sweep_scenarios,
+    )
     fracs = np.linspace(0.02, 0.98, 600)
+    base = build_workflow(0.5)
+    scenarios = sweep_scenarios(fracs)
     t0 = time.perf_counter()
-    pred = [predict_makespan(f) for f in fracs]
+    res = sweep.analyze(base, scenarios, backend="batched")
     per_analysis_us = (time.perf_counter() - t0) / len(fracs) * 1e6
+    pred = res.makespan
     # DES ground truth at every 20th point
     sel = fracs[::20]
     des = np.array([measure_makespan(f)[0] for f in sel])
-    prd = np.array([predict_makespan(f) for f in sel])
-    ref = np.array([predict_makespan(f, recipe="refined") for f in sel])
+    prd = pred[::20]
+    base_ref = build_workflow(0.5, recipe="refined")
+    ref = sweep.analyze(base_ref, sweep_scenarios(sel), backend="batched").makespan
     err_paper = float(np.mean(np.abs(prd - des) / des))
     err_refined = float(np.mean(np.abs(ref - des) / des))
-    m50, m93 = predict_makespan(0.50), predict_makespan(0.93)
+    two = sweep.analyze(base, sweep_scenarios([0.50, 0.93]), backend="batched").makespan
+    m50, m93 = float(two[0]), float(two[1])
+    best_i, best_label, best_ms = res.top_k(1)[0]
     (RESULTS / "benchmarks").mkdir(parents=True, exist_ok=True)
     np.savez(RESULTS / "benchmarks" / "fig7.npz", fracs=fracs, pred=pred,
              sel=sel, des=des, refined=ref)
-    return ("fig7_600_prioritizations", per_analysis_us,
+    return ("fig7_600_prioritizations_batched", per_analysis_us,
             f"improvement_50_to_93={100 * (1 - m93 / m50):.1f}% (paper:32%) "
-            f"err_paper_recipe={100 * err_paper:.1f}% err_refined={100 * err_refined:.2f}%")
+            f"err_paper_recipe={100 * err_paper:.1f}% err_refined={100 * err_refined:.2f}% "
+            f"best={best_label}({best_ms:.1f}s)")
+
+
+def bench_sweep_batched_vs_loop():
+    """Acceptance row: batched sweep vs looped scalar solver at B=600."""
+    from repro import sweep
+    from repro.configs.paper_workflow import build_workflow, sweep_scenarios
+    base = build_workflow(0.5)
+    B = 600
+    scenarios = sweep_scenarios(np.linspace(0.02, 0.98, B))
+    res = sweep.analyze(base, scenarios, backend="batched")  # warm caches
+    t0 = time.perf_counter()
+    res = sweep.analyze(base, scenarios, backend="batched")
+    us_batched = (time.perf_counter() - t0) / B * 1e6
+    n_loop = 60  # the loop backend is too slow to run all 600 here
+    t0 = time.perf_counter()
+    res_loop = sweep.analyze(base, scenarios[::B // n_loop], backend="loop")
+    us_loop = (time.perf_counter() - t0) / len(res_loop.makespan) * 1e6
+    err = float(np.max(np.abs(res.makespan[::B // n_loop] - res_loop.makespan)
+                       / res_loop.makespan))
+    return ("sweep_batched_vs_loop", us_batched,
+            f"B={B}: batched={us_batched:.0f}us/scen loop={us_loop:.0f}us/scen "
+            f"speedup={us_loop / us_batched:.0f}x max_rel_err={err:.1e}")
 
 
 def bench_fig8_structure():
@@ -182,6 +217,7 @@ def bench_roofline_summary():
 BENCHES = [
     bench_fig4_example,
     bench_fig7_sweep,
+    bench_sweep_batched_vs_loop,
     bench_fig8_structure,
     bench_perf_vs_des,
     bench_stepmodel,

@@ -1,0 +1,54 @@
+"""Batched what-if allocation sweep over the paper's Sect. 5 workflow.
+
+    PYTHONPATH=src python examples/sweep_allocations.py
+
+The paper's headline use case (Sect. 6/8): analysis is cheap enough to try
+*many* candidate resource allocations and pick the best.  This demo sweeps
+600 link prioritizations (Fig. 7's grid) through ``repro.sweep`` in ONE
+batched pass, ranks the allocations, prints the winner's bottleneck
+structure, and shows the batched Pallas curve queries.
+"""
+
+import time
+
+import numpy as np
+
+from repro import sweep
+from repro.configs.paper_workflow import build_workflow, sweep_scenarios
+
+B = 600
+fracs = np.linspace(0.02, 0.98, B)
+base = build_workflow(0.5)
+scenarios = sweep_scenarios(fracs)
+
+t0 = time.perf_counter()
+res = sweep.analyze(base, scenarios, backend="batched")
+dt = time.perf_counter() - t0
+print(f"analyzed {B} scenarios in {dt * 1e3:.1f} ms "
+      f"({dt / B * 1e6:.0f} us/scenario, batched lockstep engine)")
+
+t0 = time.perf_counter()
+loop = sweep.analyze(base, scenarios[::60], backend="loop")
+us_loop = (time.perf_counter() - t0) / len(loop.makespan) * 1e6
+print(f"looped scalar solver: {us_loop:.0f} us/scenario "
+      f"-> {us_loop / (dt / B * 1e6):.0f}x slower per scenario")
+
+print("\n=== top-5 allocations by predicted makespan ===")
+for i, label, makespan in res.top_k(5):
+    print(f"  {label}: {makespan:.1f}s")
+
+best = res.best()
+print(f"\n=== bottleneck structure of the winner ({res.labels[best]}) ===")
+for row in res.bottleneck_report(best):
+    print(f"  {row.process:6s} limited by {row.kind}:{row.name:5s} "
+          f"for {row.seconds:6.1f}s ({row.fraction:4.0%} of its runtime)")
+
+# batched curve queries run on the Pallas ppoly kernels: every scenario's
+# progress curve / data ceiling in one call
+ts = np.linspace(0.0, 300.0, 128)
+curves = res.sample_progress("task1", ts)          # (B, 128) via ppoly_eval
+ceil, limiter = res.data_ceiling("task3", ts)      # min_k + argmin attribution
+fin = res.kernel_finish_times("task3")             # batched first-crossing
+print(f"\nsampled {curves.shape[0]}x{curves.shape[1]} progress points; "
+      f"task3 finish via kernel first-crossing matches engine to "
+      f"{np.max(np.abs(fin - res.finish['task3']) / res.finish['task3']):.1e} rel")

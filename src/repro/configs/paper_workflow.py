@@ -135,6 +135,31 @@ def predict_makespan(frac_task1: float, *, recipe: str = "paper",
     return build_workflow(frac_task1, recipe=recipe, video_bytes=video_bytes).analyze().makespan
 
 
+def sweep_scenarios(fracs, *, video_bytes: float = VIDEO_BYTES):
+    """The Fig. 7 prioritization sweep as :mod:`repro.sweep` scenarios.
+
+    Each fraction becomes per-scenario link-allocation overrides on a shared
+    base workflow (``build_workflow(0.5)``); process definitions stay
+    identical across the batch, which is what lets the sweep engine run all
+    of them in one batched pass.
+    """
+    from repro.sweep import Scenario
+
+    out = []
+    for f in np.asarray(fracs, dtype=np.float64):
+        if not 0.0 < f < 1.0:
+            raise ValueError("frac_task1 must be in (0, 1)")
+        t1_dl_finish = video_bytes / (f * LINK_BPS)
+        out.append(Scenario(
+            label=f"frac={f:.4f}",
+            resource_inputs={
+                ("dl1", "link"): PPoly.constant(f * LINK_BPS),
+                ("dl2", "link"): PPoly.step([0.0, t1_dl_finish],
+                                            [(1.0 - f) * LINK_BPS, LINK_BPS]),
+            }))
+    return out
+
+
 # ==========================================================================
 # DES twin — the mechanistic "measured" system (and WRENCH runtime rival)
 # ==========================================================================

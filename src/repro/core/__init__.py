@@ -15,13 +15,15 @@ from .ppoly import PPoly
 from .process import DataDep, Process, ResourceDep
 from .solver import ProgressResult, Segment, solve, solve_alg1, solve_euler
 from .workflow import Workflow, WorkflowResult
-from .bottleneck import BottleneckShare, bottleneck_report, potential_gains, whatif_scale_resource
+from .bottleneck import (BottleneckShare, bottleneck_report, potential_gains,
+                         whatif_scale_resource)
 from .shared import sequential_allocation, total_usage, usage_rate
 
 __all__ = [
     "PPoly", "Process", "DataDep", "ResourceDep",
     "solve", "solve_euler", "solve_alg1", "ProgressResult", "Segment",
     "Workflow", "WorkflowResult",
-    "BottleneckShare", "bottleneck_report", "potential_gains", "whatif_scale_resource",
+    "BottleneckShare", "bottleneck_report", "potential_gains",
+    "whatif_scale_resource",
     "sequential_allocation", "usage_rate", "total_usage",
 ]

@@ -27,18 +27,32 @@ class BottleneckShare:
     fraction: float  # of that process's runtime
 
 
+def aggregate_segments(segments, t_start: float, finish: float):
+    """Seconds attributed to each ``(kind, name)`` limiting factor.
+
+    Aggregation core of the scalar report below: clips every segment to the
+    effective finish (for never-finishing processes: the start of the last,
+    open-ended segment) and accumulates per factor.  Returns ``(acc,
+    total)``.  The batched sweep engine mirrors exactly these semantics,
+    vectorized over scenarios, in ``repro.sweep.engine._aggregate_shares`` —
+    keep the two in sync (the sweep tests assert their agreement).
+    """
+    fin = finish if np.isfinite(finish) else max(
+        (s.t_end for s in segments if np.isfinite(s.t_end)), default=t_start)
+    total = max(fin - t_start, 1e-12)
+    acc: dict[tuple[str, str], float] = {}
+    for s in segments:
+        t1 = min(s.t_end, fin)
+        if t1 > s.t_start:
+            acc[(s.kind, s.name)] = acc.get((s.kind, s.name), 0.0) + (t1 - s.t_start)
+    return acc, total
+
+
 def bottleneck_report(wr: WorkflowResult) -> list[BottleneckShare]:
     """Time each limiting factor holds a process back, sorted by share."""
     out: list[BottleneckShare] = []
     for pname, r in wr.results.items():
-        fin = r.finish_time if np.isfinite(r.finish_time) else max(
-            (s.t_end for s in r.segments if np.isfinite(s.t_end)), default=r.t_start)
-        total = max(fin - r.t_start, 1e-12)
-        acc: dict[tuple[str, str], float] = {}
-        for s in r.segments:
-            t1 = min(s.t_end, fin)
-            if t1 > s.t_start:
-                acc[(s.kind, s.name)] = acc.get((s.kind, s.name), 0.0) + (t1 - s.t_start)
+        acc, total = aggregate_segments(r.segments, r.t_start, r.finish_time)
         for (kind, name), secs in acc.items():
             out.append(BottleneckShare(pname, kind, name, secs, secs / total))
     out.sort(key=lambda b: -b.seconds)

@@ -211,6 +211,21 @@ class PPoly:
     def degree(self) -> int:
         return self.coeffs.shape[1] - 1
 
+    @property
+    def is_piecewise_linear(self) -> bool:
+        """True when every piece has degree <= 1 (the class the batched
+        sweep engine and the first-crossing kernel operate on)."""
+        return self.coeffs.shape[1] <= 2
+
+    def linear_parts(self):
+        """``(starts, values, slopes)`` arrays of a piecewise-linear function
+        — the packing hook used by the batched sweep substrate."""
+        if not self.is_piecewise_linear:
+            raise ValueError("linear_parts requires piecewise-linear input")
+        c1 = (self.coeffs[:, 1] if self.coeffs.shape[1] > 1
+              else np.zeros(self.n_pieces))
+        return self.starts.copy(), self.coeffs[:, 0].copy(), c1.copy()
+
     def piece_index(self, t: float) -> int:
         """Index of the piece governing the *right* value at ``t``."""
         i = int(np.searchsorted(self.starts, t + TIME_TOL, side="right") - 1)

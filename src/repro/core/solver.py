@@ -177,7 +177,12 @@ def solve(
         window_end = pd_piece_end
         p_breaks: list[tuple[float, str, float, int]] = []  # (p_break, resource, jump, idx)
         for l in res_names:
-            cl = float(dR[l](p))
+            # evaluate the marginal requirement consistently with the
+            # breakpoint scan below: a zero-jump breakpoint within ptol of p
+            # counts as passed, so the slope must be the post-breakpoint one
+            # (p can land a float-epsilon below a breakpoint whose scale far
+            # exceeds the absolute TIME_TOL used by piece selection).
+            cl = float(dR[l](p + ptol))
             # next unabsorbed progress breakpoint of R_Rl at/above p
             rs = R[l].starts
             j = int(np.searchsorted(rs, p - ptol, side="left"))

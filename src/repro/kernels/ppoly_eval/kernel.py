@@ -22,25 +22,135 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .ref import _BIG, PAD_START
+
 
 def _ppoly_kernel(starts_ref, coeffs_ref, q_ref, out_ref, *, n_pieces: int, n_coef: int):
-    starts = starts_ref[...]            # (bB, P)
-    coeffs = coeffs_ref[...]            # (bB, P, K)
-    q = q_ref[...]                      # (bB, bT)
+    out_ref[...] = _eval_one(starts_ref[...], coeffs_ref[...], q_ref[...],
+                             n_pieces, n_coef)
 
+
+def _eval_one(starts, coeffs, q, n_pieces: int, n_coef: int):
+    """Shared kernel body: evaluate (bB, P)/(bB, P, K) at (bB, bT) queries."""
     cmp = (starts[:, None, :] <= q[:, :, None]).astype(jnp.float32)   # (bB,bT,P)
     idx = jnp.maximum(jnp.sum(cmp, axis=-1) - 1.0, 0.0)               # (bB,bT)
     piece_ids = jax.lax.broadcasted_iota(jnp.float32, (1, 1, n_pieces), 2)
     onehot = (idx[:, :, None] == piece_ids).astype(jnp.float32)       # (bB,bT,P)
-
-    # local coordinate, zeroed on non-selected pieces so padding sentinels
-    # (1e30) cannot overflow into the masked sum
-    u = (q[:, :, None] - starts[:, None, :]) * onehot                 # (bB,bT,P)
-
+    u = (q[:, :, None] - starts[:, None, :]) * onehot
     acc = jnp.zeros_like(u)
     for k in range(n_coef - 1, -1, -1):
         acc = acc * u + coeffs[:, None, :, k]
-    out_ref[...] = jnp.sum(acc * onehot, axis=-1)
+    return jnp.sum(acc * onehot, axis=-1)
+
+
+_PAD_HALF = PAD_START * 0.5  # padding-slot detection threshold
+
+
+def _ppoly_min_kernel(starts_ref, coeffs_ref, q_ref, val_ref, arg_ref,
+                      *, n_fns: int, n_pieces: int, n_coef: int):
+    """min over F stacked functions with argmin; F is a static Python loop."""
+    q = q_ref[...]                                      # (bB, bT)
+    best = jnp.full_like(q, _BIG)
+    arg = jnp.zeros_like(q)
+    for f in range(n_fns):
+        starts_f = starts_ref[:, f, :]                  # (bB, P)
+        coeffs_f = coeffs_ref[:, f, :, :]               # (bB, P, K)
+        v = _eval_one(starts_f, coeffs_f, q, n_pieces, n_coef)
+        valid = (starts_f[:, 0] < _PAD_HALF)[:, None]   # padding function slot?
+        v = jnp.where(valid, v, _BIG)
+        take = v < best                                 # strict: ties keep lowest f
+        arg = jnp.where(take, jnp.float32(f), arg)
+        best = jnp.where(take, v, best)
+    val_ref[...] = best
+    arg_ref[...] = arg
+
+
+def ppoly_min_eval_pallas(starts: jnp.ndarray, coeffs: jnp.ndarray, q: jnp.ndarray,
+                          *, block_b: int = 8, block_t: int = 128,
+                          interpret: bool = True):
+    """``pallas_call`` wrapper for min-with-argmin over stacked functions.
+
+    starts (B, F, P) · coeffs (B, F, P, K) · q (B, T) → ((B, T), (B, T)).
+    The argmin output is float32 (lane-friendly); cast at the call site.
+    """
+    B, F, P = starts.shape
+    K = coeffs.shape[-1]
+    T = q.shape[-1]
+    assert B % block_b == 0 and T % block_t == 0, "pad inputs to block multiples"
+    grid = (B // block_b, T // block_t)
+    kernel = functools.partial(_ppoly_min_kernel, n_fns=F, n_pieces=P, n_coef=K)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, F, P), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_b, F, P, K), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T), jnp.float32),
+            jax.ShapeDtypeStruct((B, T), jnp.float32),
+        ],
+        interpret=interpret,
+    )(starts, coeffs, q)
+
+
+def _first_crossing_kernel(starts_ref, c0_ref, c1_ref, plen_ref, y_ref, out_ref):
+    """First t with f(t) >= y for monotone piecewise-linear f (closed form)."""
+    starts = starts_ref[...]            # (bB, P)
+    c0 = c0_ref[...]                    # (bB, P)
+    c1 = c1_ref[...]                    # (bB, P)
+    plen = plen_ref[...]                # (bB, P)
+    y = y_ref[...]                      # (bB, bT)
+    s_ = starts[:, None, :]             # (bB, 1, P)
+    c0_ = c0[:, None, :]
+    c1_ = c1[:, None, :]
+    plen_ = plen[:, None, :]
+    y_ = y[:, :, None]                  # (bB, bT, 1)
+    tol = 1e-6 * jnp.maximum(1.0, jnp.abs(y_))
+    cand = jnp.where(c0_ >= y_ - tol, s_, _BIG)
+    u = (y_ - c0_) / jnp.where(c1_ > 0, c1_, 1.0)
+    ok = (c1_ > 0) & (c0_ < y_ - tol) & (u <= plen_)
+    cand = jnp.minimum(cand, jnp.where(ok, s_ + u, _BIG))
+    cand = jnp.where(s_ < _PAD_HALF, cand, _BIG)
+    out_ref[...] = jnp.min(cand, axis=-1)
+
+
+def ppoly_first_crossing_pallas(starts: jnp.ndarray, coeffs: jnp.ndarray,
+                                y: jnp.ndarray, *, block_b: int = 8,
+                                block_t: int = 128, interpret: bool = True):
+    """``pallas_call`` wrapper for batched first-crossing queries.
+
+    starts (B, P) · coeffs (B, P, 2) · y (B, T) → (B, T) crossing times.
+    """
+    B, P = starts.shape
+    T = y.shape[-1]
+    assert coeffs.shape[-1] <= 2, "first crossing requires piecewise-linear input"
+    assert B % block_b == 0 and T % block_t == 0, "pad inputs to block multiples"
+    c0 = coeffs[..., 0]
+    c1 = coeffs[..., 1] if coeffs.shape[-1] > 1 else jnp.zeros_like(c0)
+    plen = jnp.concatenate([starts[:, 1:],
+                            jnp.full((B, 1), PAD_START, starts.dtype)],
+                           axis=1) - starts
+    grid = (B // block_b, T // block_t)
+    return pl.pallas_call(
+        _first_crossing_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        interpret=interpret,
+    )(starts, c0, c1, plen, y)
 
 
 def ppoly_eval_pallas(starts: jnp.ndarray, coeffs: jnp.ndarray, q: jnp.ndarray,

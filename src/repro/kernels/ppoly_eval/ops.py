@@ -1,4 +1,13 @@
-"""Public op: batched piecewise-polynomial evaluation (jit'd, auto-padded)."""
+"""Public ops: batched piecewise-polynomial queries (jit'd, auto-padded).
+
+* :func:`ppoly_eval` — evaluate B functions at T points each.
+* :func:`ppoly_min_eval` — ``min_f`` over F stacked functions with argmin
+  (the batched form of ``PPoly.minimum`` — bottleneck attribution).
+* :func:`ppoly_first_crossing` — first ``t`` with ``f(t) >= y`` for monotone
+  piecewise-linear functions (batched finish-time extraction).
+* :func:`pack_ppolys` / :func:`pack_ppolys_np` / :func:`pack_ppoly_grid` —
+  pad ``repro.core.ppoly.PPoly`` objects into dense arrays.
+"""
 
 from __future__ import annotations
 
@@ -8,12 +17,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import ppoly_eval_pallas
-from .ref import PAD_START, ppoly_eval_ref
+from .kernel import ppoly_eval_pallas, ppoly_first_crossing_pallas, ppoly_min_eval_pallas
+from .ref import PAD_START, ppoly_eval_ref, ppoly_first_crossing_ref, ppoly_min_eval_ref
 
 
 def _ceil_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def _flags(use_pallas, interpret):
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = True
+    if interpret is None:
+        interpret = not on_tpu
+    return use_pallas, interpret
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_b", "block_t"))
@@ -44,12 +62,107 @@ def ppoly_eval(starts, coeffs, q, *, use_pallas: bool | None = None,
     starts = jnp.asarray(starts, jnp.float32)
     coeffs = jnp.asarray(coeffs, jnp.float32)
     q = jnp.asarray(q, jnp.float32)
-    on_tpu = jax.default_backend() == "tpu"
-    if use_pallas is None:
-        use_pallas = True
-    if interpret is None:
-        interpret = not on_tpu
+    use_pallas, interpret = _flags(use_pallas, interpret)
     return _dispatch(starts, coeffs, q, use_pallas, interpret, block_b, block_t)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_b", "block_t"))
+def _dispatch_min(starts, coeffs, q, use_pallas: bool, interpret: bool,
+                  block_b: int, block_t: int):
+    if not use_pallas:
+        return ppoly_min_eval_ref(starts, coeffs, q)
+    B, F, P = starts.shape
+    T = q.shape[-1]
+    Bp, Tp = _ceil_to(B, block_b), _ceil_to(T, block_t)
+    # padded batch rows hold only invalid function slots (all-PAD starts);
+    # the kernel maps them to _BIG and they are sliced away below
+    sp = jnp.pad(starts, ((0, Bp - B), (0, 0), (0, 0)), constant_values=PAD_START)
+    cp = jnp.pad(coeffs, ((0, Bp - B), (0, 0), (0, 0), (0, 0)))
+    qp = jnp.pad(q, ((0, Bp - B), (0, Tp - T)))
+    vals, arg = ppoly_min_eval_pallas(sp, cp, qp, block_b=block_b,
+                                      block_t=block_t, interpret=interpret)
+    return vals[:B, :T], arg[:B, :T].astype(jnp.int32)
+
+
+def ppoly_min_eval(starts, coeffs, q, *, use_pallas: bool | None = None,
+                   interpret: bool | None = None, block_b: int = 8,
+                   block_t: int = 128):
+    """``min_f f(t)`` with argmin over F stacked functions per batch row.
+
+    Args:
+      starts: (B, F, P); function slots whose row is all ``PAD_START`` are
+        treated as absent (can never attain the minimum).
+      coeffs: (B, F, P, K).
+      q:      (B, T) query positions.
+
+    Returns:
+      ``(vals (B,T) float32, argmin (B,T) int32)``.  This is the batched form
+      of ``PPoly.minimum`` — eq. (2)'s section-wise limiting function with
+      bottleneck attribution — over every scenario of a sweep at once.
+    """
+    starts = jnp.asarray(starts, jnp.float32)
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    use_pallas, interpret = _flags(use_pallas, interpret)
+    vals, arg = _dispatch_min(starts, coeffs, q, use_pallas, interpret,
+                              block_b, block_t)
+    return vals, arg.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_b", "block_t"))
+def _dispatch_crossing(starts, coeffs, y, use_pallas: bool, interpret: bool,
+                       block_b: int, block_t: int):
+    if not use_pallas:
+        return ppoly_first_crossing_ref(starts, coeffs, y)
+    B, P = starts.shape
+    T = y.shape[-1]
+    Bp, Tp = _ceil_to(B, block_b), _ceil_to(T, block_t)
+    sp = jnp.pad(starts, ((0, Bp - B), (0, 0)), constant_values=PAD_START)
+    cp = jnp.pad(coeffs, ((0, Bp - B), (0, 0), (0, 0)))
+    yp = jnp.pad(y, ((0, Bp - B), (0, Tp - T)))
+    out = ppoly_first_crossing_pallas(sp, cp, yp, block_b=block_b,
+                                      block_t=block_t, interpret=interpret)
+    return out[:B, :T]
+
+
+def ppoly_first_crossing(starts, coeffs, y, *, use_pallas: bool | None = None,
+                         interpret: bool | None = None, block_b: int = 8,
+                         block_t: int = 128):
+    """First ``t`` with ``f(t) >= y`` for monotone piecewise-linear batches.
+
+    ``starts (B,P)``, ``coeffs (B,P,K<=2)``, ``y (B,T)`` → (B,T) float32 (a
+    value ``>= 1e30`` means the level is never reached).  With ``y = p_end``
+    this extracts finish times from a whole sweep's progress functions in one
+    batched pass (Algorithm 2's completion query, vectorized).
+    """
+    starts = jnp.asarray(starts, jnp.float32)
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    if coeffs.shape[-1] > 2:
+        raise ValueError("ppoly_first_crossing requires piecewise-linear input")
+    y = jnp.asarray(y, jnp.float32)
+    use_pallas, interpret = _flags(use_pallas, interpret)
+    return _dispatch_crossing(starts, coeffs, y, use_pallas, interpret,
+                              block_b, block_t)
+
+
+def pack_ppolys_np(ppolys, max_pieces: int | None = None, max_coef: int | None = None,
+                   dtype=np.float32):
+    """Pack ``PPoly`` objects into padded numpy ``(B, P)`` / ``(B, P, K)``.
+
+    The float64 variant is the exact packing used by the sweep engine; the
+    float32 variant feeds the Pallas kernels.
+    """
+    P = max_pieces or max(f.n_pieces for f in ppolys)
+    K = max_coef or max(f.coeffs.shape[1] for f in ppolys)
+    B = len(ppolys)
+    starts = np.full((B, P), PAD_START, dtype)
+    coeffs = np.zeros((B, P, K), dtype)
+    for i, f in enumerate(ppolys):
+        n = min(f.n_pieces, P)
+        k = min(f.coeffs.shape[1], K)
+        starts[i, :n] = f.starts[:n]
+        coeffs[i, :n, :k] = f.coeffs[:n, :k]
+    return starts, coeffs
 
 
 def pack_ppolys(ppolys, max_pieces: int | None = None, max_coef: int | None = None):
@@ -57,14 +170,26 @@ def pack_ppolys(ppolys, max_pieces: int | None = None, max_coef: int | None = No
 
     Returns float32 arrays (B, P) / (B, P, K) ready for :func:`ppoly_eval`.
     """
-    P = max_pieces or max(f.n_pieces for f in ppolys)
-    K = max_coef or max(f.coeffs.shape[1] for f in ppolys)
-    B = len(ppolys)
-    starts = np.full((B, P), PAD_START, np.float32)
-    coeffs = np.zeros((B, P, K), np.float32)
-    for i, f in enumerate(ppolys):
-        n = min(f.n_pieces, P)
-        k = min(f.coeffs.shape[1], K)
-        starts[i, :n] = f.starts[:n]
-        coeffs[i, :n, :k] = f.coeffs[:n, :k]
+    starts, coeffs = pack_ppolys_np(ppolys, max_pieces, max_coef, np.float32)
+    return jnp.asarray(starts), jnp.asarray(coeffs)
+
+
+def pack_ppoly_grid(grid, max_pieces: int | None = None, max_coef: int | None = None):
+    """Pack a ``B x F`` nested list of PPolys (``None`` = absent slot) into
+    (B, F, P) / (B, F, P, K) float32 arrays for :func:`ppoly_min_eval`."""
+    B = len(grid)
+    F = max(len(row) for row in grid)
+    flat = [f for row in grid for f in row if f is not None]
+    P = max_pieces or max(f.n_pieces for f in flat)
+    K = max_coef or max(f.coeffs.shape[1] for f in flat)
+    starts = np.full((B, F, P), PAD_START, np.float32)
+    coeffs = np.zeros((B, F, P, K), np.float32)
+    for i, row in enumerate(grid):
+        for j, f in enumerate(row):
+            if f is None:
+                continue
+            n = min(f.n_pieces, P)
+            k = min(f.coeffs.shape[1], K)
+            starts[i, j, :n] = f.starts[:n]
+            coeffs[i, j, :n, :k] = f.coeffs[:n, :k]
     return jnp.asarray(starts), jnp.asarray(coeffs)

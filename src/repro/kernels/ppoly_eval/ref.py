@@ -1,10 +1,21 @@
-"""Pure-jnp oracle for batched piecewise-polynomial evaluation."""
+"""Pure-jnp oracles for batched piecewise-polynomial queries.
+
+Three primitives, mirrored by the Pallas kernels in :mod:`.kernel`:
+
+* :func:`ppoly_eval_ref` — evaluate B functions at T points each,
+* :func:`ppoly_min_eval_ref` — ``min_k f_k(t)`` with argmin attribution over a
+  stacked family of F functions per batch row (paper eq. (2): the limiting
+  function IS the bottleneck),
+* :func:`ppoly_first_crossing_ref` — first ``t`` with ``f(t) >= y`` for
+  monotone piecewise-linear ``f`` (finish-time extraction / event queries).
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 PAD_START = 1e30  # sentinel start for padding pieces (never selected)
+_BIG = 3e37       # "+inf" stand-in that survives float32 arithmetic
 
 
 def ppoly_eval_ref(starts: jnp.ndarray, coeffs: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
@@ -32,3 +43,67 @@ def ppoly_eval_ref(starts: jnp.ndarray, coeffs: jnp.ndarray, q: jnp.ndarray) -> 
     for k in range(K - 1, -1, -1):
         acc = acc * u + c[..., k]
     return acc
+
+
+def ppoly_min_eval_ref(starts: jnp.ndarray, coeffs: jnp.ndarray, q: jnp.ndarray):
+    """``min_f`` over a stacked family of piecewise polynomials, with argmin.
+
+    Args:
+      starts: (B, F, P) piece starts; an all-``PAD_START`` row marks an
+        invalid (padding) function slot that can never attain the minimum.
+      coeffs: (B, F, P, K) ascending local coefficients.
+      q:      (B, T) query positions.
+
+    Returns:
+      ``(vals, argmin)`` of shapes (B, T) / (B, T) int32.  Ties resolve to the
+      lowest function index (matching ``PPoly.minimum`` attribution).
+    """
+    B, F, P = starts.shape
+    K = coeffs.shape[-1]
+    T = q.shape[-1]
+    cmp = starts[:, :, None, :] <= q[:, None, :, None]                    # (B,F,T,P)
+    idx = jnp.maximum(jnp.sum(cmp.astype(jnp.int32), axis=-1) - 1, 0)     # (B,F,T)
+    c = jnp.take_along_axis(coeffs, jnp.broadcast_to(idx[..., None],
+                                                     (B, F, T, K)), axis=2)
+    s = jnp.take_along_axis(starts, idx, axis=2)                          # (B,F,T)
+    u = q[:, None, :] - s
+    acc = jnp.zeros_like(u)
+    for k in range(K - 1, -1, -1):
+        acc = acc * u + c[..., k]
+    valid = (starts[:, :, 0] < PAD_START * 0.5)[:, :, None]               # (B,F,1)
+    acc = jnp.where(valid, acc, _BIG)
+    vals = jnp.min(acc, axis=1)
+    arg = jnp.argmin(acc, axis=1).astype(jnp.int32)
+    return vals, arg
+
+
+def ppoly_first_crossing_ref(starts: jnp.ndarray, coeffs: jnp.ndarray,
+                             y: jnp.ndarray) -> jnp.ndarray:
+    """First ``t`` with ``f(t) >= y`` for monotone piecewise-LINEAR ``f``.
+
+    Args:
+      starts: (B, P) piece starts (``PAD_START`` padding).
+      coeffs: (B, P, K) with K <= 2 (piecewise linear; jumps allowed).
+      y:      (B, T) query levels.
+
+    Returns:
+      (B, T) crossing times (``>= _BIG`` when the level is never reached).
+    """
+    B, P = starts.shape
+    c0 = coeffs[..., 0]
+    c1 = coeffs[..., 1] if coeffs.shape[-1] > 1 else jnp.zeros_like(c0)
+    valid = starts < PAD_START * 0.5                                      # (B,P)
+    plen = jnp.concatenate([starts[:, 1:], jnp.full((B, 1), PAD_START)],
+                           axis=1) - starts                               # (B,P)
+    y_ = y[:, :, None]                                                    # (B,T,1)
+    s_ = starts[:, None, :]
+    c0_, c1_, plen_ = c0[:, None, :], c1[:, None, :], plen[:, None, :]
+    tol = 1e-6 * jnp.maximum(1.0, jnp.abs(y_))
+    # candidate 1: the piece already starts at/above y (covers jumps)
+    cand = jnp.where(c0_ >= y_ - tol, s_, _BIG)
+    # candidate 2: an increasing piece crosses y before its end
+    u = (y_ - c0_) / jnp.where(c1_ > 0, c1_, 1.0)
+    ok = (c1_ > 0) & (c0_ < y_ - tol) & (u <= plen_)
+    cand = jnp.minimum(cand, jnp.where(ok, s_ + u, _BIG))
+    cand = jnp.where(valid[:, None, :], cand, _BIG)
+    return jnp.min(cand, axis=-1)

@@ -1,0 +1,105 @@
+"""Scenario description + batch packing for the what-if sweep engine.
+
+A :class:`Scenario` is a *delta* against a base :class:`~repro.core.Workflow`:
+per-process resource-rate inputs and/or external data-input functions to
+replace (the paper's Fig. 7 sweep varies exactly these — 600 different link
+prioritizations of the same five-process workflow).  :class:`ScenarioBatch`
+resolves every scenario's functions and packs them into padded batched arrays
+(via ``kernels/ppoly_eval/ops.pack_ppolys``) ready for the lockstep engine
+and the Pallas query kernels.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.ppoly import PPoly
+from repro.core.workflow import Workflow
+
+from .plin import BPL
+
+
+@dataclass
+class Scenario:
+    """Per-scenario overrides applied on top of the base workflow.
+
+    Keys are ``(process, resource)`` / ``(process, data_dep)`` pairs; values
+    are the replacement input functions ``I_Rl(t)`` / ``I_Dk(t)``.  Process
+    definitions (requirement/output functions) are shared across the batch.
+    """
+
+    label: str = ""
+    resource_inputs: dict[tuple[str, str], PPoly] = field(default_factory=dict)
+    data_inputs: dict[tuple[str, str], PPoly] = field(default_factory=dict)
+
+
+class ScenarioBatch:
+    """Resolve + pack B scenarios' input functions against a base workflow."""
+
+    def __init__(self, workflow: Workflow, scenarios: list[Scenario]):
+        if not scenarios:
+            raise ValueError("need at least one scenario")
+        self.workflow = workflow
+        self.scenarios = list(scenarios)
+        self.B = len(scenarios)
+        edge_deps = {(e.dst, e.dep) for e in workflow.edges}
+        for i, sc in enumerate(self.scenarios):
+            for (proc, res) in sc.resource_inputs:
+                if proc not in workflow.processes:
+                    raise ValueError(f"scenario {i}: unknown process {proc!r}")
+                if res not in workflow.processes[proc].resources:
+                    raise ValueError(f"scenario {i}: process {proc!r} has no "
+                                     f"resource {res!r}")
+            for (proc, dep) in sc.data_inputs:
+                if proc not in workflow.processes:
+                    raise ValueError(f"scenario {i}: unknown process {proc!r}")
+                if dep not in workflow.processes[proc].data:
+                    raise ValueError(f"scenario {i}: process {proc!r} has no "
+                                     f"data dep {dep!r}")
+                if (proc, dep) in edge_deps:
+                    raise ValueError(
+                        f"scenario {i}: data dep {proc!r}/{dep!r} is produced "
+                        "by an upstream process and cannot be overridden")
+
+    # -- per-scenario function resolution ---------------------------------
+    def resource_ppolys(self, proc: str, res: str) -> list[PPoly]:
+        base = self.workflow.resource_alloc.get(proc, {}).get(res)
+        out = []
+        for sc in self.scenarios:
+            fn = sc.resource_inputs.get((proc, res), base)
+            if fn is None:
+                raise ValueError(f"no resource input for {proc!r}/{res!r}")
+            out.append(fn)
+        return out
+
+    def data_ppolys(self, proc: str, dep: str) -> list[PPoly]:
+        base = self.workflow.external_data.get(proc, {}).get(dep)
+        out = []
+        for sc in self.scenarios:
+            fn = sc.data_inputs.get((proc, dep), base)
+            if fn is None:
+                raise ValueError(f"no external data input for {proc!r}/{dep!r}")
+            out.append(fn)
+        return out
+
+    # -- packed batched forms ----------------------------------------------
+    def resource_bpl(self, proc: str, res: str) -> BPL:
+        return BPL.from_ppolys(self.resource_ppolys(proc, res))
+
+    def data_bpl(self, proc: str, dep: str) -> BPL:
+        return BPL.from_ppolys(self.data_ppolys(proc, dep))
+
+    def apply(self, i: int) -> Workflow:
+        """Materialize scenario ``i`` as a standalone workflow (loop backend)."""
+        from repro.core.bottleneck import _clone
+
+        wf = _clone(self.workflow)
+        sc = self.scenarios[i]
+        for (proc, res), fn in sc.resource_inputs.items():
+            wf.resource_alloc.setdefault(proc, {})[res] = fn
+        for (proc, dep), fn in sc.data_inputs.items():
+            wf.external_data.setdefault(proc, {})[dep] = fn
+        return wf
+
+    def labels(self) -> list[str]:
+        return [sc.label or f"scenario-{i}" for i, sc in enumerate(self.scenarios)]

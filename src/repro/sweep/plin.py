@@ -1,0 +1,192 @@
+"""Batched piecewise-linear function algebra on padded arrays.
+
+The scalar substrate (:mod:`repro.core.ppoly`) represents ONE function as an
+object; a what-if sweep needs the same algebra over HUNDREDS of scenarios at
+once.  :class:`BPL` holds a batch of right-continuous piecewise-linear
+functions as padded ``(B, P)`` arrays — exactly the layout of
+``kernels/ppoly_eval`` — and implements every query the batched solver needs
+as vectorized numpy (float64, exact to the same precision as the scalar
+path):
+
+* right/left evaluation and slopes,
+* next-breakpoint queries,
+* first-crossing (``min{t : f(t) >= y}``, the paper's eq. (8) inverse),
+* antiderivatives of piecewise-constant rate functions (burst absorption),
+* composition ``outer(inner(t))`` of a *shared* scalar piecewise-linear
+  ``outer`` with a batched monotone ``inner`` (paper eq. (1)).
+
+Padding uses the kernels' ``PAD_START`` sentinel so a ``BPL`` can be handed
+to the Pallas ops (after a float32 cast) without re-packing.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.ppoly import PPoly, TIME_TOL, VAL_RTOL
+from repro.kernels.ppoly_eval.ops import pack_ppolys_np
+from repro.kernels.ppoly_eval.ref import PAD_START
+
+_INF = float("inf")
+
+
+class UnsupportedScenario(ValueError):
+    """The batched engine's restricted function class is violated.
+
+    The engine covers monotone piecewise-linear data inputs (jumps allowed)
+    and piecewise-constant resource rate inputs — everything the paper's
+    evaluation sweeps use.  Anything richer falls back to the scalar solver.
+    """
+
+
+@dataclass
+class BPL:
+    """Batch of right-continuous piecewise-linear functions.
+
+    ``starts (B, P)`` ascending per row, padded with ``PAD_START``;
+    ``c0/c1 (B, P)`` value/slope in local coordinates ``u = t - start``.
+    """
+
+    starts: np.ndarray
+    c0: np.ndarray
+    c1: np.ndarray
+
+    # -- constructors -----------------------------------------------------
+    @staticmethod
+    def from_ppolys(fns: list[PPoly], max_pieces: int | None = None) -> "BPL":
+        for f in fns:
+            if not f.is_piecewise_linear:
+                raise UnsupportedScenario(
+                    "batched sweep requires piecewise-linear functions "
+                    f"(got degree {f.degree})")
+        starts, coeffs = pack_ppolys_np(fns, max_pieces=max_pieces, max_coef=2,
+                                        dtype=np.float64)
+        return BPL(starts, coeffs[..., 0].copy(), coeffs[..., 1].copy())
+
+    @staticmethod
+    def constant(v: np.ndarray, start: np.ndarray) -> "BPL":
+        v = np.asarray(v, np.float64)
+        return BPL(np.asarray(start, np.float64)[:, None], v[:, None],
+                   np.zeros((len(v), 1)))
+
+    # -- basics ------------------------------------------------------------
+    @property
+    def B(self) -> int:
+        return self.starts.shape[0]
+
+    @property
+    def P(self) -> int:
+        return self.starts.shape[1]
+
+    def valid(self) -> np.ndarray:
+        return self.starts < PAD_START * 0.5
+
+    def _gather(self, idx: np.ndarray):
+        take = np.take_along_axis
+        return (take(self.starts, idx, 1), take(self.c0, idx, 1),
+                take(self.c1, idx, 1))
+
+    def _index(self, t: np.ndarray, tol: float) -> np.ndarray:
+        """Piece index per query; ``t`` is (B,) or (B, M)."""
+        t2 = t[:, None] if t.ndim == 1 else t
+        cmp = self.starts[:, None, :] <= t2[:, :, None] + tol        # (B,M,P)
+        return np.maximum(cmp.sum(-1) - 1, 0)
+
+    def eval_right(self, t: np.ndarray) -> np.ndarray:
+        one = t.ndim == 1
+        idx = self._index(t, TIME_TOL)
+        s, c0, c1 = self._gather(idx)
+        t2 = t[:, None] if one else t
+        out = c0 + c1 * (t2 - s)
+        return out[:, 0] if one else out
+
+    def eval_left(self, t: np.ndarray) -> np.ndarray:
+        one = t.ndim == 1
+        idx = self._index(t, -TIME_TOL)
+        s, c0, c1 = self._gather(idx)
+        t2 = t[:, None] if one else t
+        out = c0 + c1 * (t2 - s)
+        return out[:, 0] if one else out
+
+    def slope_right(self, t: np.ndarray) -> np.ndarray:
+        one = t.ndim == 1
+        idx = self._index(t, TIME_TOL)
+        out = np.take_along_axis(self.c1, idx, 1)
+        return out[:, 0] if one else out
+
+    def next_break_after(self, t: np.ndarray) -> np.ndarray:
+        """Smallest breakpoint ``> t + TIME_TOL`` per row (inf if none)."""
+        cand = np.where(self.valid() & (self.starts > t[:, None] + TIME_TOL),
+                        self.starts, _INF)
+        return cand.min(1)
+
+    # -- queries -----------------------------------------------------------
+    def first_at_or_above(self, y: np.ndarray, t_lo: np.ndarray | None = None) -> np.ndarray:
+        """First ``t >= t_lo`` with ``f(t) >= y`` (f monotone nondecreasing)."""
+        y_ = np.asarray(y, np.float64)[:, None]                      # (B,1)
+        nxt = np.concatenate([self.starts[:, 1:],
+                              np.full((self.B, 1), PAD_START)], 1)
+        plen = nxt - self.starts
+        tol = VAL_RTOL * np.maximum(1.0, np.abs(y_)) + 1e-12
+        cand = np.where(self.c0 >= y_ - tol, self.starts, _INF)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            u = (y_ - self.c0) / np.where(self.c1 > 0, self.c1, 1.0)
+        ok = (self.c1 > 0) & (self.c0 < y_ - tol) & (u <= plen + TIME_TOL)
+        cand = np.minimum(cand, np.where(ok, self.starts + u, _INF))
+        cand = np.where(self.valid(), cand, _INF)
+        out = cand.min(1)
+        if t_lo is not None:
+            out = np.where(np.isfinite(out), np.maximum(out, t_lo), out)
+        return out
+
+    # -- calculus ----------------------------------------------------------
+    def is_piecewise_constant(self) -> bool:
+        return bool(np.all(np.where(self.valid(), self.c1, 0.0) == 0.0))
+
+    def antiderivative(self) -> "BPL":
+        """Continuous antiderivative (value 0 at the domain start).
+
+        Restricted to piecewise-constant inputs so the result stays linear —
+        the burst-absorption query of Algorithm 2 (resource integrals).
+        """
+        if not self.is_piecewise_constant():
+            raise UnsupportedScenario(
+                "antiderivative needs piecewise-constant rate inputs")
+        nxt = np.concatenate([self.starts[:, 1:],
+                              np.full((self.B, 1), PAD_START)], 1)
+        plen = np.where(nxt < PAD_START * 0.5, nxt - self.starts, 0.0)
+        areas = np.where(self.valid(), self.c0 * plen, 0.0)
+        acc = np.concatenate([np.zeros((self.B, 1)), np.cumsum(areas, 1)[:, :-1]], 1)
+        return BPL(self.starts.copy(), acc, self.c0.copy())
+
+
+def compose_scalar(outer: PPoly, inner: BPL) -> BPL:
+    """``outer(inner(t))`` for shared piecewise-linear ``outer`` (jumps OK)
+    and batched monotone non-decreasing ``inner`` (paper eq. (1), batched).
+
+    New breakpoints are inner's own plus the first crossing of each outer
+    breakpoint value — per scenario, fully vectorized.
+    """
+    if outer.coeffs.shape[1] > 2:
+        raise UnsupportedScenario(
+            "batched sweep requires piecewise-linear requirement functions")
+    o_s = outer.starts
+    o_c0 = outer.coeffs[:, 0]
+    o_c1 = outer.coeffs[:, 1] if outer.coeffs.shape[1] > 1 else np.zeros(len(o_s))
+    B = inner.B
+    cols = [inner.starts]
+    for v in o_s[1:]:
+        cross = inner.first_at_or_above(np.full(B, float(v)))
+        cols.append(np.where(np.isfinite(cross), cross, PAD_START)[:, None])
+    starts = np.sort(np.concatenate(cols, 1), axis=1)
+    v = inner.eval_right(starts)
+    si = inner.slope_right(starts)
+    oi = np.maximum(np.searchsorted(o_s, v + TIME_TOL, side="right") - 1, 0)
+    c0 = o_c0[oi] + o_c1[oi] * (v - o_s[oi])
+    c1 = o_c1[oi] * si
+    pad = starts >= PAD_START * 0.5
+    return BPL(starts, np.where(pad, 0.0, c0), np.where(pad, 0.0, c1))
+
+

@@ -14,6 +14,15 @@ from repro.models.common import init_params
 
 B, S = 2, 64
 
+#: archs whose smoke configs take tens of seconds on CPU -> slow tier
+_HEAVY = {"jamba-v0.1-52b", "qwen3-moe-235b-a22b", "kimi-k2-1t-a32b",
+          "starcoder2-15b"}
+
+
+def _arch_params(archs):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+            for a in archs]
+
 
 def _batch(cfg, key):
     if cfg.frontend == "audio":
@@ -27,7 +36,7 @@ def _batch(cfg, key):
     }
 
 
-@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("arch", _arch_params(list_archs()))
 def test_forward_and_train_step(arch):
     cfg = get_smoke_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -52,7 +61,7 @@ def test_forward_and_train_step(arch):
     assert float(loss2) < float(loss) + 1.0  # no blow-up
 
 
-@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("arch", _arch_params(list_archs()))
 def test_decode_shapes(arch):
     cfg = get_smoke_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -68,9 +77,9 @@ def test_decode_shapes(arch):
     assert jax.tree.structure(cache) == jax.tree.structure(cache2)
 
 
-@pytest.mark.parametrize("arch", ["yi-9b", "h2o-danube-3-4b", "qwen3-moe-235b-a22b",
-                                  "jamba-v0.1-52b", "rwkv6-1.6b", "musicgen-medium",
-                                  "qwen2-vl-72b"])
+@pytest.mark.parametrize("arch", _arch_params(
+    ["yi-9b", "h2o-danube-3-4b", "qwen3-moe-235b-a22b", "jamba-v0.1-52b",
+     "rwkv6-1.6b", "musicgen-medium", "qwen2-vl-72b"]))
 def test_decode_matches_forward(arch):
     """Token-by-token cached decode reproduces full-sequence logits."""
     cfg = get_smoke_config(arch)

@@ -2,6 +2,8 @@
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ppoly import PPoly, poly_compose, poly_eval, poly_shift

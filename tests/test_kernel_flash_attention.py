@@ -8,6 +8,9 @@ import pytest
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
+# interpret-mode Pallas runs are minutes-scale on CPU -> weekly slow tier
+pytestmark = pytest.mark.slow
+
 
 def _qkv(key, B, H, Hkv, S, D, dtype):
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(key), 3)

@@ -1,10 +1,18 @@
-"""Kernel validation: ppoly_eval Pallas kernel vs oracles, shape/dtype sweep."""
+"""Kernel validation: ppoly_eval Pallas kernels vs oracles, shape/dtype sweep."""
 
 import numpy as np
 import pytest
 
 from repro.core import PPoly
-from repro.kernels.ppoly_eval import PAD_START, pack_ppolys, ppoly_eval, ppoly_eval_ref
+from repro.kernels.ppoly_eval import (
+    PAD_START,
+    pack_ppoly_grid,
+    pack_ppolys,
+    ppoly_eval,
+    ppoly_eval_ref,
+    ppoly_first_crossing,
+    ppoly_min_eval,
+)
 from repro.kernels.ppoly_eval.kernel import ppoly_eval_pallas
 
 
@@ -72,3 +80,78 @@ def test_burst_step_function():
 
 def test_pad_sentinel_is_large():
     assert PAD_START >= 1e29
+
+
+# -------------------------------------------------- min-eval with argmin ----
+def _attr_at(segments, t):
+    lab = segments[0][1]
+    for (ss, ll) in segments:
+        if ss <= t + 1e-9:
+            lab = ll
+    return lab
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_min_eval_matches_scalar_minimum(use_pallas):
+    rng = np.random.default_rng(7)
+    rows = []
+    for _ in range(3):
+        fns = []
+        for _f in range(3):
+            xs = np.concatenate([[0.0], np.sort(rng.uniform(1.0, 40.0, 3))])
+            fns.append(PPoly.pwlinear(xs, np.cumsum(rng.uniform(0, 8, 4))))
+        rows.append(fns)
+    rows[1] = rows[1][:2] + [None]  # ragged batch: padding function slot
+    starts, coeffs = pack_ppoly_grid(rows)
+    q = rng.uniform(0.0, 50.0, (3, 32)).astype(np.float32)
+    vals, arg = ppoly_min_eval(starts, coeffs, q, use_pallas=use_pallas)
+    vals, arg = np.asarray(vals), np.asarray(arg)
+    for i, fns in enumerate(rows):
+        live = [f for f in fns if f is not None]
+        m, seg = PPoly.minimum(live)
+        exact = m(q[i].astype(np.float64))
+        scale = np.maximum(1.0, np.abs(exact))
+        assert np.all(np.abs(vals[i] - exact) / scale < 5e-4)
+        for j, t in enumerate(q[i]):
+            want = _attr_at(seg, float(t))
+            # skip points within float32 slack of an attribution change
+            near = any(abs(float(t) - s) < 1e-3 for s, _ in seg)
+            if not near:
+                assert arg[i, j] == want, (i, j, float(t))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_first_crossing_matches_scalar(use_pallas):
+    fns = [PPoly.pwlinear([0.0, 10.0, 20.0], [0.0, 5.0, 30.0]),
+           PPoly.step([0.0, 7.0], [0.0, 9.0]),
+           PPoly.pwlinear([0.0, 4.0], [1.0, 1.0])]  # flat: most levels unreachable
+    starts, coeffs = pack_ppolys(fns)
+    y = np.array([[0.0, 4.0, 17.0, 30.0],
+                  [0.0, 5.0, 9.0, 10.0],
+                  [0.5, 1.0, 2.0, 50.0]], np.float32)
+    out = np.asarray(ppoly_first_crossing(starts, coeffs, y, use_pallas=use_pallas))
+    for b, f in enumerate(fns):
+        for j in range(y.shape[1]):
+            exact = f.first_time_at_or_above(float(y[b, j]), float(f.starts[0]))
+            if np.isfinite(exact):
+                assert out[b, j] == pytest.approx(exact, rel=1e-4, abs=1e-4), (b, j)
+            else:
+                assert out[b, j] >= 1e29, (b, j)
+
+
+def test_first_crossing_rejects_high_degree():
+    f = PPoly(np.array([0.0]), [np.array([0.0, 1.0, 1.0])])
+    starts, coeffs = pack_ppolys([f])
+    with pytest.raises(ValueError, match="piecewise-linear"):
+        ppoly_first_crossing(starts, coeffs, np.zeros((1, 1), np.float32))
+
+
+def test_min_eval_pallas_agrees_with_ref():
+    rng = np.random.default_rng(11)
+    rows = [_random_ppolys(rng, 4, max_pieces=5, max_deg=2) for _ in range(5)]
+    starts, coeffs = pack_ppoly_grid(rows)
+    q = rng.uniform(-2.0, 60.0, (5, 130)).astype(np.float32)
+    v_k, a_k = ppoly_min_eval(starts, coeffs, q, use_pallas=True, interpret=True)
+    v_r, a_r = ppoly_min_eval(starts, coeffs, q, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_r), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))

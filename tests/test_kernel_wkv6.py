@@ -6,6 +6,9 @@ import pytest
 
 from repro.kernels.wkv6 import wkv6, wkv_recurrent_ref
 
+# interpret-mode Pallas runs are minutes-scale on CPU -> weekly slow tier
+pytestmark = pytest.mark.slow
+
 
 def _inputs(key, B, L, H, N, decay_scale=2.0):
     ks = jax.random.split(jax.random.PRNGKey(key), 5)

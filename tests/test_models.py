@@ -43,6 +43,7 @@ def _mamba_params(cfg, key):
     return {k: _init_leaf(kk, s, cfg) for (k, s), kk in zip(specs.items(), ks)}
 
 
+@pytest.mark.slow
 def test_mamba_chunked_scan_matches_decode_chain():
     """Full-sequence chunked scan == step-by-step recurrent decode."""
     cfg = _mamba_cfg()

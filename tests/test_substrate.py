@@ -132,6 +132,7 @@ def test_adamw_bf16_moments_compression():
 
 
 # ------------------------------------------------------------- grad accum ----
+@pytest.mark.slow
 def test_grad_accumulation_equivalent_to_full_batch():
     import jax
     import jax.numpy as jnp

@@ -1,0 +1,283 @@
+"""Sweep engine tests: batched lockstep solver vs B independent scalar solves.
+
+The acceptance contract: ``sweep.analyze`` on a batch of B scenarios must
+match B independent ``core.solver.solve`` runs — makespans, per-process
+finish times, AND bottleneck attribution — to float32-level tolerance,
+including jump (burst) and starvation edge cases.
+"""
+
+import numpy as np
+import pytest
+
+from repro import sweep
+from repro.configs.paper_workflow import build_workflow, sweep_scenarios
+from repro.core import DataDep, PPoly, Process, ResourceDep, Workflow
+
+RTOL = 1e-5  # float32-level agreement demanded by the acceptance criteria
+
+
+def _assert_match(rb: sweep.SweepResult, rl: sweep.SweepResult):
+    np.testing.assert_allclose(rb.makespan, rl.makespan, rtol=RTOL, atol=1e-9)
+    for pn in rb.order:
+        fb, fl = rb.finish[pn], rl.finish[pn]
+        both_inf = ~np.isfinite(fb) & ~np.isfinite(fl)
+        np.testing.assert_array_equal(np.isfinite(fb), np.isfinite(fl))
+        np.testing.assert_allclose(fb[~both_inf], fl[~both_inf],
+                                   rtol=RTOL, atol=1e-9)
+    bmap = {k: j for j, k in enumerate(rb.factors)}
+    lmap = {k: j for j, k in enumerate(rl.factors)}
+    for k in set(bmap) | set(lmap):
+        sb = rb.share_seconds[:, bmap[k]] if k in bmap else np.zeros(rb.B)
+        sl = rl.share_seconds[:, lmap[k]] if k in lmap else np.zeros(rl.B)
+        np.testing.assert_allclose(sb, sl, rtol=1e-4, atol=1e-6,
+                                   err_msg=f"attribution mismatch for {k}")
+
+
+# ------------------------------------------------------------- canonical ----
+def _dl_process(n=1000.0):
+    return Process("dl", data={"file": DataDep.stream(n, n)},
+                   resources={"link": ResourceDep.stream(n, n)},
+                   total_progress=n).identity_output()
+
+
+def _single(res_fn, n=1000.0):
+    wf = Workflow()
+    wf.add(_dl_process(n), resources={"link": res_fn})
+    wf.set_data_input("dl", "file", PPoly.constant(n))
+    return wf
+
+
+def test_constant_rate_matches_scalar():
+    wf = _single(PPoly.constant(10.0))
+    scs = [sweep.Scenario(label=f"r{r}",
+                          resource_inputs={("dl", "link"): PPoly.constant(r)})
+           for r in (2.0, 5.0, 10.0, 40.0)]
+    rb = sweep.analyze(wf, scs, backend="batched")
+    rl = sweep.analyze(wf, scs, backend="loop")
+    _assert_match(rb, rl)
+    np.testing.assert_allclose(rb.finish["dl"], [500.0, 200.0, 100.0, 25.0])
+
+
+def test_starvation_window():
+    wf = _single(PPoly.step([0, 10, 20], [10.0, 0.0, 10.0]))
+    rb = sweep.analyze(wf, [sweep.Scenario()], backend="batched")
+    rl = sweep.analyze(wf, [sweep.Scenario()], backend="loop")
+    _assert_match(rb, rl)
+    assert rb.finish["dl"][0] == pytest.approx(110.0)
+    # the starved decade is attributed to the link
+    assert rb.proc_results["dl"].progress.eval_right(np.array([15.0]))[0] \
+        == pytest.approx(100.0)
+
+
+def test_permanent_starvation_never_finishes():
+    wf = _single(PPoly.step([0, 10], [10.0, 0.0]))
+    rb = sweep.analyze(wf, [sweep.Scenario()], backend="batched")
+    rl = sweep.analyze(wf, [sweep.Scenario()], backend="loop")
+    assert not np.isfinite(rb.finish["dl"][0])
+    assert not np.isfinite(rl.finish["dl"][0])
+    _assert_match(rb, rl)
+
+
+def test_mixed_attribution_then_permanent_starvation():
+    """Attribution flips before starving forever: the never-finishing share
+    clip must match the scalar segment semantics."""
+    n = 1000.0
+    wf = Workflow()
+    wf.add(_dl_process(n), resources={"link": PPoly.step([0, 5], [400.0, 0.0])})
+    # slow data feed makes the start data-limited; at t=5 the link dies
+    wf.set_data_input("dl", "file", PPoly.linear(0.0, 20.0))
+    rb = sweep.analyze(wf, [sweep.Scenario()], backend="batched")
+    rl = sweep.analyze(wf, [sweep.Scenario()], backend="loop")
+    assert not np.isfinite(rb.finish["dl"][0])
+    _assert_match(rb, rl)
+
+
+def test_burst_consumer_chain_and_gate():
+    n = 1000.0
+    wf = Workflow()
+    wf.add(_dl_process(n), resources={"link": PPoly.constant(10.0)})
+    wf.set_data_input("dl", "file", PPoly.constant(n))
+    rev = Process("rev", data={"in": DataDep.burst(n, 500.0)},
+                  resources={"cpu": ResourceDep.stream(50.0, 500.0)},
+                  total_progress=500.0).identity_output()
+    wf.add(rev, resources={"cpu": PPoly.constant(1.0)})
+    wf.connect("dl", "rev", "in")
+    rot = Process("rot", data={"in": DataDep.stream(500.0, 500.0)},
+                  resources={"cpu": ResourceDep.stream(5.0, 500.0)},
+                  total_progress=500.0).identity_output()
+    wf.add(rot, resources={"cpu": PPoly.constant(1.0)}, start_after=["rev"])
+    wf.connect("rev", "rot", "in")
+    scs = [sweep.Scenario(label=f"r{r}",
+                          resource_inputs={("dl", "link"): PPoly.constant(r)})
+           for r in (5.0, 10.0, 20.0, 50.0)]
+    rb = sweep.analyze(wf, scs, backend="batched")
+    rl = sweep.analyze(wf, scs, backend="loop")
+    _assert_match(rb, rl)
+    np.testing.assert_allclose(rb.makespan, [255.0, 155.0, 105.0, 75.0])
+
+
+def test_burst_resource_stall_absorption():
+    n = 1000.0
+    pr = Process("burst", data={"d": DataDep.stream(n, n)},
+                 resources={"cpu": ResourceDep.stream(20.0, n),
+                            "mem": ResourceDep.burst_at(500.0, 30.0, n)},
+                 total_progress=n).identity_output()
+    wf = Workflow()
+    wf.add(pr, resources={"cpu": PPoly.constant(1.0), "mem": PPoly.constant(2.0)})
+    wf.set_data_input("burst", "d", PPoly.linear(0.0, 50.0))
+    scs = [sweep.Scenario(label=f"m{m}",
+                          resource_inputs={("burst", "mem"): PPoly.constant(m)})
+           for m in (0.5, 1.0, 2.0, 1000.0)]
+    rb = sweep.analyze(wf, scs, backend="batched")
+    rl = sweep.analyze(wf, scs, backend="loop")
+    _assert_match(rb, rl)
+
+
+# ------------------------------------------------------- randomized sweep ----
+def _random_workflow(rng):
+    """A 2-process chain with randomized pw-linear inputs, bursts, steps."""
+    n = float(rng.integers(200, 2000))
+    p2 = float(rng.integers(100, 1000))
+    wf = Workflow()
+    d1 = (DataDep.stream(n, n) if rng.random() < 0.7 else DataDep.burst(n, n))
+    res1 = {"link": ResourceDep.stream(float(rng.uniform(10, 100)), n)}
+    if rng.random() < 0.4:
+        res1["mem"] = ResourceDep.burst_at(float(rng.uniform(0.1, 0.9)) * n,
+                                           float(rng.uniform(1, 20)), n)
+    pr1 = Process("p1", data={"d": d1}, resources=res1,
+                  total_progress=n).identity_output()
+    wf.add(pr1, resources={l: PPoly.constant(float(rng.uniform(0.5, 5)))
+                           for l in res1})
+    wf.set_data_input("p1", "d", PPoly.constant(n))
+    d2 = (DataDep.stream(n, p2) if rng.random() < 0.5 else DataDep.burst(n, p2))
+    pr2 = Process("p2", data={"in": d2},
+                  resources={"cpu": ResourceDep.stream(float(rng.uniform(5, 50)), p2)},
+                  total_progress=p2).identity_output()
+    gate = ["p1"] if rng.random() < 0.3 else None
+    wf.add(pr2, resources={"cpu": PPoly.constant(1.0)}, start_after=gate)
+    wf.connect("p1", "p2", "in")
+    return wf
+
+
+def _random_scenarios(rng, wf, b):
+    out = []
+    for i in range(b):
+        ov = {}
+        for pn, allocs in wf.resource_alloc.items():
+            for res in allocs:
+                style = rng.random()
+                if style < 0.5:
+                    fn = PPoly.constant(float(rng.uniform(0.2, 8.0)))
+                elif style < 0.85:
+                    ts = np.sort(rng.uniform(1.0, 120.0, 2))
+                    fn = PPoly.step([0.0, *ts],
+                                    list(rng.uniform(0.0, 8.0, 3)))
+                else:  # starvation window
+                    t0 = float(rng.uniform(1.0, 40.0))
+                    fn = PPoly.step([0.0, t0, t0 + float(rng.uniform(1, 30))],
+                                    [float(rng.uniform(1, 6)), 0.0,
+                                     float(rng.uniform(1, 6))])
+                ov[(pn, res)] = fn
+        out.append(sweep.Scenario(label=f"s{i}", resource_inputs=ov))
+    return out
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_randomized_scenarios_match_scalar(seed):
+    rng = np.random.default_rng(seed)
+    wf = _random_workflow(rng)
+    scs = _random_scenarios(rng, wf, 16)
+    rb = sweep.analyze(wf, scs, backend="batched")
+    rl = sweep.analyze(wf, scs, backend="loop")
+    _assert_match(rb, rl)
+
+
+def test_hypothesis_property_sweep_matches_scalar():
+    """Deeper property test when hypothesis is available (CI installs it)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None, derandomize=True)
+    def run(seed):
+        rng = np.random.default_rng(seed)
+        wf = _random_workflow(rng)
+        scs = _random_scenarios(rng, wf, 4)
+        _assert_match(sweep.analyze(wf, scs, backend="batched"),
+                      sweep.analyze(wf, scs, backend="loop"))
+
+    run()
+
+
+# ------------------------------------------------------ paper Fig. 7 sweep ----
+def test_paper_sweep_matches_scalar_loop():
+    base = build_workflow(0.5)
+    scs = sweep_scenarios(np.linspace(0.05, 0.95, 31))
+    rb = sweep.analyze(base, scs, backend="batched")
+    rl = sweep.analyze(base, scs, backend="loop")
+    _assert_match(rb, rl)
+    # ranking: best allocation sits in the >= 0.93 plateau (paper Fig. 7)
+    best_label = rb.top_k(1)[0][1]
+    assert float(best_label.split("=")[1]) >= 0.9
+
+
+def test_paper_sweep_refined_recipe():
+    base = build_workflow(0.5, recipe="refined")
+    scs = sweep_scenarios(np.linspace(0.1, 0.9, 17))
+    _assert_match(sweep.analyze(base, scs, backend="batched"),
+                  sweep.analyze(base, scs, backend="loop"))
+
+
+# ------------------------------------------------------- API / kernels -------
+def test_scenario_validation():
+    wf = _single(PPoly.constant(10.0))
+    with pytest.raises(ValueError, match="unknown process"):
+        sweep.analyze(wf, [sweep.Scenario(resource_inputs={("nope", "link"):
+                                                           PPoly.constant(1.0)})])
+    with pytest.raises(ValueError, match="no resource"):
+        sweep.analyze(wf, [sweep.Scenario(resource_inputs={("dl", "nope"):
+                                                           PPoly.constant(1.0)})])
+
+
+def test_unsupported_scenario_falls_back_to_loop():
+    wf = _single(PPoly.pwlinear([0.0, 50.0], [5.0, 20.0]))  # ramp: not pw-const
+    rb = sweep.analyze(wf, [sweep.Scenario()], backend="auto")
+    assert rb.backend == "loop"
+    with pytest.raises(sweep.UnsupportedScenario):
+        sweep.analyze(wf, [sweep.Scenario()], backend="batched")
+    # loop backend agrees with a direct scalar analysis
+    assert rb.makespan[0] == pytest.approx(wf.analyze().makespan)
+
+
+def test_kernel_finish_times_agree():
+    base = build_workflow(0.5)
+    scs = sweep_scenarios(np.linspace(0.2, 0.9, 8))
+    rb = sweep.analyze(base, scs, backend="batched")
+    for pn in rb.order:
+        got = rb.kernel_finish_times(pn, use_pallas=False)
+        np.testing.assert_allclose(got, rb.finish[pn], rtol=5e-5)
+
+
+def test_sample_progress_matches_scalar_curves():
+    base = build_workflow(0.5)
+    scs = sweep_scenarios([0.3, 0.6, 0.9])
+    rb = sweep.analyze(base, scs, backend="batched")
+    ts = np.linspace(0.0, 400.0, 64)
+    batch = sweep.ScenarioBatch(base, scs)
+    for pn in rb.order:
+        got = rb.sample_progress(pn, ts, use_pallas=False)
+        for i in range(len(scs)):
+            wr = batch.apply(i).analyze()
+            exact = wr.results[pn].progress(ts)
+            scale = np.maximum(1.0, np.abs(exact))
+            assert np.max(np.abs(got[i] - exact) / scale) < 2e-4
+
+
+def test_data_ceiling_min_eval_attribution():
+    base = build_workflow(0.5)
+    scs = sweep_scenarios([0.4, 0.8])
+    rb = sweep.analyze(base, scs, backend="batched")
+    ts = np.linspace(0.0, 300.0, 32)
+    vals, arg = rb.data_ceiling("task3", ts, use_pallas=False)
+    assert vals.shape == (2, 32) and arg.shape == (2, 32)
+    assert set(np.unique(arg)) <= {0, 1}
