@@ -113,6 +113,46 @@ def bench_sweep_batched_vs_loop():
             f"speedup={us_loop / us_batched:.0f}x max_rel_err={err:.1e}")
 
 
+def bench_compile_once_resweep():
+    """Acceptance row: repeated sweeps on ONE compiled plan vs the legacy
+    ``sweep.analyze`` shim that re-compiles (validates, topo-sorts, derives
+    curves, re-packs arrays) on every call.
+
+    The two paths are measured interleaved (alternating order) and
+    summarized by their minima — scheduling noise on a shared box only ever
+    ADDS time, so with enough pairs the min is the robust per-call cost.
+    The compile cost the plan amortizes is also measured directly.
+    """
+    from repro import sweep
+    from repro.configs.paper_workflow import build_workflow, sweep_scenarios
+    base = build_workflow(0.5)
+    parts = []
+    us_plan_600 = 0.0
+    for B, n in ((600, 40), (32, 60)):
+        scenarios = sweep_scenarios(np.linspace(0.02, 0.98, B))
+        t0 = time.perf_counter()
+        plan = base.compile()
+        us_compile = (time.perf_counter() - t0) * 1e6
+        plan.sweep(scenarios)                       # warm
+        sweep.analyze(base, scenarios)
+        tp, tl = [], []
+        for k in range(n):
+            pair = [(tp, lambda: plan.sweep(scenarios)),
+                    (tl, lambda: sweep.analyze(base, scenarios))]
+            for sink, fn in (pair if k % 2 == 0 else pair[::-1]):
+                t0 = time.perf_counter()
+                fn()
+                sink.append((time.perf_counter() - t0) * 1e6)
+        us_plan, us_legacy = min(tp), min(tl)
+        if B == 600:
+            us_plan_600 = us_plan
+        parts.append(f"B={B}: plan.sweep={us_plan / 1e3:.1f}ms "
+                     f"legacy_analyze={us_legacy / 1e3:.1f}ms "
+                     f"speedup={us_legacy / us_plan:.2f}x "
+                     f"(compile once: {us_compile / 1e3:.2f}ms/call saved)")
+    return ("compile_once_resweep", us_plan_600, " ".join(parts))
+
+
 def bench_fig8_structure():
     from repro.configs.paper_workflow import build_workflow
     from repro.core import bottleneck_report
@@ -218,6 +258,7 @@ BENCHES = [
     bench_fig4_example,
     bench_fig7_sweep,
     bench_sweep_batched_vs_loop,
+    bench_compile_once_resweep,
     bench_fig8_structure,
     bench_perf_vs_des,
     bench_stepmodel,
@@ -225,15 +266,33 @@ BENCHES = [
     bench_roofline_summary,
 ]
 
+#: machine-readable per-benchmark wall times, tracked across PRs
+BENCH_JSON = ROOT / "BENCH_sweep.json"
 
-def main() -> None:
+
+def main(argv: list[str] | None = None) -> None:
+    """Run all benchmarks (or those whose name contains an argv substring),
+    print the CSV rows, and record them in ``BENCH_sweep.json``."""
+    import sys
+    filters = list(argv if argv is not None else sys.argv[1:])
+    rows = []
     print("name,us_per_call,derived")
     for fn in BENCHES:
+        if filters and not any(f in fn.__name__ for f in filters):
+            continue
         try:
             name, us, derived = fn()
             print(f"{name},{us:.1f},{derived}")
+            rows.append({"name": name, "us_per_call": round(float(us), 1),
+                         "derived": derived})
         except Exception as e:  # noqa: BLE001
             print(f"{fn.__name__},NaN,ERROR:{type(e).__name__}:{e}")
+            rows.append({"name": fn.__name__, "us_per_call": None,
+                         "error": f"{type(e).__name__}: {e}"})
+    if not filters:  # partial runs must not clobber the tracked trajectory
+        BENCH_JSON.write_text(json.dumps({"schema": 1, "rows": rows},
+                                         indent=2) + "\n")
+        print(f"# wrote {BENCH_JSON.name} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""One front door: compile-once / query-many BottleMod analysis.
+
+    plan = workflow.compile()              # topo, validation, packing: ONCE
+    plan.solve().makespan                  # exact scalar analysis
+    plan.sweep(scenarios.grid({...}))      # B what-ifs, one batched pass
+    plan.whatif(**{"task1.cpu": 2.0})      # one-off override query
+    plan.bottleneck_fn()                   # piecewise overall bottleneck
+    plan.gain(("task1", "cpu"))            # makespan won by relaxing it
+
+Every query returns the same :class:`~repro.analysis.report.Report` type;
+see :mod:`repro.analysis.scenarios` for the scenario-builder DSL and
+:mod:`repro.analysis.plan` for what compilation precomputes.
+"""
+
+from .bottleneck import BottleneckFn, BottleneckInterval, derive_bottleneck_fn
+from .report import BottleneckRow, FinishTimes, Report, report_from_scalar
+from .scenarios import ScenarioSpec, grid, override, scale_resource, speed_up_data
+from . import scenarios
+from .plan import CompiledWorkflow, compile_workflow
+
+__all__ = [
+    "BottleneckFn", "BottleneckInterval", "BottleneckRow", "CompiledWorkflow",
+    "FinishTimes", "Report", "ScenarioSpec", "compile_workflow",
+    "derive_bottleneck_fn", "grid", "override", "report_from_scalar",
+    "scale_resource", "scenarios", "speed_up_data",
+]

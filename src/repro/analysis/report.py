@@ -1,0 +1,259 @@
+"""The unified analysis result — one `Report` for scalar and batched queries.
+
+Every query on a :class:`~repro.analysis.plan.CompiledWorkflow` —
+``solve()``, ``sweep(...)``, ``whatif(...)`` — returns a :class:`Report`
+with the same accessors:
+
+* ``makespan`` — float (scalar queries) or ``(B,)`` array (sweeps),
+* ``finish(name)`` / ``finish[name]`` — per-process finish times,
+* ``timeline(i)`` — the ``(t0, t1, process, kind, name)`` bottleneck timeline,
+* ``shares(i)`` — per-factor bottleneck shares sorted by seconds,
+* ``top_k(k)`` — scenario ranking by makespan.
+
+Batched reports additionally expose the Pallas-backed curve queries
+(:meth:`Report.sample_progress`, :meth:`Report.data_ceiling`,
+:meth:`Report.kernel_finish_times`) and record the backend every scenario
+actually ran on (``backends`` — ``"batched"`` fast path vs ``"loop"``
+scalar fallback).
+
+``repro.sweep.SweepResult`` is a back-compat alias of this class.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Any, Iterable
+
+import numpy as np
+
+if TYPE_CHECKING:  # imported lazily at runtime to keep the package acyclic
+    from repro.core.solver import ProgressResult
+    from repro.sweep.batch import Scenario
+    from repro.sweep.engine import BatchProcResult
+
+    from .plan import CompiledWorkflow
+
+__all__ = ["BottleneckRow", "FinishTimes", "Report", "report_from_scalar"]
+
+
+@dataclass
+class BottleneckRow:
+    """One (process, limiting factor) share of one scenario — mirrors
+    :class:`repro.core.bottleneck.BottleneckShare`."""
+
+    process: str
+    kind: str
+    name: str
+    seconds: float
+    fraction: float
+
+
+class FinishTimes(dict[str, np.ndarray]):
+    """Per-process finish times: a mapping AND the unified accessor.
+
+    ``report.finish["dl1"]`` returns the raw ``(B,)`` array (back-compat
+    with the original ``SweepResult.finish`` dict); ``report.finish("dl1")``
+    returns a float for scalar reports and the array for sweeps.
+    """
+
+    scalar: bool = False
+
+    def __call__(self, name: str) -> Any:
+        arr = self[name]
+        return float(arr[0]) if self.scalar else arr
+
+
+def _pack_f32(bpl: Any) -> tuple[np.ndarray, np.ndarray]:
+    """BPL (float64 numpy) -> (starts, coeffs) float32 for the Pallas ops."""
+    starts = bpl.starts.astype(np.float32)
+    coeffs = np.stack([bpl.c0, bpl.c1], -1).astype(np.float32)
+    return starts, coeffs
+
+
+@dataclass
+class Report:
+    """Unified analysis of one scenario (scalar) or B scenarios (sweep)."""
+
+    labels: list[str]
+    order: list[str]
+    makespans: np.ndarray                      # (B,)
+    finish: FinishTimes                        # per process (B,)
+    factors: list[tuple[str, str, str]]        # (process, kind, name)
+    share_seconds: np.ndarray                  # (B, n_factors)
+    share_fractions: np.ndarray                # (B, n_factors) of proc runtime
+    backends: list[str]                        # per scenario: batched|loop|scalar
+    proc_results: dict[str, BatchProcResult] | None = None
+    scalar_results: dict[str, ProgressResult] | None = None
+    plan: CompiledWorkflow | None = field(default=None, repr=False, compare=False)
+    scenarios: list[Scenario] | None = field(default=None, repr=False, compare=False)
+    _drill_cache: dict[int, dict[str, ProgressResult]] = field(
+        default_factory=dict, repr=False, compare=False)
+
+    # -- shape / mode -------------------------------------------------------
+    @property
+    def B(self) -> int:
+        return len(self.makespans)
+
+    @property
+    def is_scalar(self) -> bool:
+        """True for reports of a single scalar query (solve / whatif)."""
+        return self.backends == ["scalar"]
+
+    @property
+    def backend(self) -> str:
+        """Aggregate backend: ``batched`` / ``loop`` / ``scalar`` / ``mixed``."""
+        kinds = set(self.backends)
+        return self.backends[0] if len(kinds) == 1 else "mixed"
+
+    @property
+    def makespan(self) -> Any:
+        """Workflow makespan: float for scalar reports, ``(B,)`` for sweeps."""
+        return float(self.makespans[0]) if self.is_scalar else self.makespans
+
+    # -- rankings ----------------------------------------------------------
+    def top_k(self, k: int = 5) -> list[tuple[int, str, float]]:
+        """The k best scenarios: ``(index, label, makespan)`` ascending."""
+        idx = np.argsort(self.makespans, kind="stable")[:k]
+        return [(int(i), self.labels[int(i)], float(self.makespans[int(i)]))
+                for i in idx]
+
+    def best(self) -> int:
+        return int(np.argmin(self.makespans))
+
+    # -- attribution --------------------------------------------------------
+    def bottleneck_report(self, i: int = 0) -> list[BottleneckRow]:
+        """Per-scenario factor shares, sorted by seconds (same contract as
+        the scalar :func:`repro.core.bottleneck.bottleneck_report`)."""
+        rows = [BottleneckRow(p, kind, name, float(self.share_seconds[i, j]),
+                              float(self.share_fractions[i, j]))
+                for j, (p, kind, name) in enumerate(self.factors)
+                if self.share_seconds[i, j] > 0.0]
+        rows.sort(key=lambda r: -r.seconds)
+        return rows
+
+    def shares(self, i: int | None = None) -> list[BottleneckRow]:
+        """Bottleneck shares of scenario ``i`` (default: the best scenario;
+        scalar reports have exactly one)."""
+        if i is None:
+            i = 0 if self.is_scalar else self.best()
+        return self.bottleneck_report(int(i))
+
+    def timeline(self, i: int | None = None) -> list[tuple[float, float, str, str, str]]:
+        """Flattened ``(t0, t1, process, kind, name)`` bottleneck timeline of
+        scenario ``i`` (default: the best scenario).
+
+        Scalar reports read their exact solver segments; batched reports
+        drill down by re-solving the one requested scenario with the exact
+        scalar solver (cached) — the sweep engine keeps only aggregated
+        shares, not per-scenario segments.
+        """
+        results = self._segments_for(0 if self.is_scalar else
+                                     (self.best() if i is None else int(i)))
+        out: list[tuple[float, float, str, str, str]] = []
+        for pname in self.order:
+            r = results[pname]
+            for s in r.segments:
+                t1 = min(s.t_end, r.finish_time)
+                if t1 > s.t_start:
+                    out.append((s.t_start, t1, pname, s.kind, s.name))
+        out.sort()
+        return out
+
+    def _segments_for(self, i: int) -> dict[str, ProgressResult]:
+        if self.is_scalar:
+            assert self.scalar_results is not None
+            return self.scalar_results
+        if i in self._drill_cache:
+            return self._drill_cache[i]
+        if self.plan is None or self.scenarios is None:
+            raise ValueError(
+                "timeline() on a sweep report needs the originating compiled "
+                "plan; re-run the sweep through CompiledWorkflow.sweep()")
+        sc = self.scenarios[i]
+        results = self.plan.scalar_results(sc.resource_inputs, sc.data_inputs)
+        self._drill_cache[i] = results
+        return results
+
+    # -- batched curve queries (Pallas-backed) ------------------------------
+    def _proc(self, name: str) -> BatchProcResult:
+        if self.proc_results is None:
+            raise ValueError(
+                "curve queries need the fully-batched backend (this report "
+                f"ran {self.backend!r})")
+        return self.proc_results[name]
+
+    def sample_progress(self, proc: str, ts: np.ndarray, **kw: Any) -> np.ndarray:
+        """``P(t)`` for every scenario at ``ts``: (B, T) float32, evaluated by
+        the batched ``ppoly_eval`` kernel."""
+        from repro.kernels.ppoly_eval import ppoly_eval
+
+        starts, coeffs = _pack_f32(self._proc(proc).progress)
+        q = np.broadcast_to(np.asarray(ts, np.float32), (self.B, len(ts)))
+        return np.asarray(ppoly_eval(starts, coeffs, q, **kw))
+
+    def data_ceiling(self, proc: str, ts: np.ndarray,
+                     **kw: Any) -> tuple[np.ndarray, np.ndarray]:
+        """``P_D(t) = min_k R_Dk(I_Dk(t))`` with argmin attribution for every
+        scenario at ``ts`` — one ``ppoly_min_eval`` kernel call.
+
+        Returns ``(vals (B,T) float32, argmin (B,T) int32)`` where the argmin
+        indexes the process's data deps in declaration order.
+        """
+        from repro.kernels.ppoly_eval import PAD_START, ppoly_min_eval
+
+        r = self._proc(proc)
+        packs = [_pack_f32(c) for c in r.ceilings]
+        P = max(s.shape[1] for s, _ in packs)
+        F = len(packs)
+        starts = np.full((self.B, F, P), PAD_START, np.float32)
+        coeffs = np.zeros((self.B, F, P, 2), np.float32)
+        for f, (s, c) in enumerate(packs):
+            starts[:, f, :s.shape[1]] = s
+            coeffs[:, f, :s.shape[1]] = c
+        q = np.broadcast_to(np.asarray(ts, np.float32), (self.B, len(ts)))
+        vals, arg = ppoly_min_eval(starts, coeffs, q, **kw)
+        return np.asarray(vals), np.asarray(arg)
+
+    def kernel_finish_times(self, proc: str, **kw: Any) -> np.ndarray:
+        """Finish times re-derived on device: batched first-crossing of each
+        scenario's progress function with ``p_end`` (float32)."""
+        from repro.kernels.ppoly_eval import ppoly_first_crossing
+
+        r = self._proc(proc)
+        starts, coeffs = _pack_f32(r.progress)
+        y = np.full((self.B, 1), r.p_end, np.float32)
+        out = np.asarray(ppoly_first_crossing(starts, coeffs, y, **kw))[:, 0]
+        return np.where(out >= 1e29, np.inf, out.astype(np.float64))
+
+
+def scalar_shares(results: dict[str, ProgressResult], order: Iterable[str],
+                  ) -> tuple[list[tuple[str, str, str]], list[float], list[float]]:
+    """Factor keys + (seconds, fraction) shares of one scalar solve."""
+    from repro.core.bottleneck import aggregate_segments
+
+    keys: list[tuple[str, str, str]] = []
+    secs: list[float] = []
+    fracs: list[float] = []
+    for name in order:
+        r = results[name]
+        acc, total = aggregate_segments(r.segments, r.t_start, r.finish_time)
+        for (kind, fname), s in acc.items():
+            keys.append((name, kind, fname))
+            secs.append(s)
+            fracs.append(s / total)
+    return keys, secs, fracs
+
+
+def report_from_scalar(results: dict[str, ProgressResult], order: list[str],
+                       label: str, plan: CompiledWorkflow | None = None) -> Report:
+    """Wrap one exact scalar solve into the unified :class:`Report`."""
+    makespan = max((results[n].finish_time for n in order), default=0.0)
+    finish = FinishTimes({n: np.array([results[n].finish_time]) for n in order})
+    finish.scalar = True
+    keys, secs, fracs = scalar_shares(results, order)
+    return Report(
+        labels=[label], order=list(order), makespans=np.array([makespan]),
+        finish=finish, factors=keys,
+        share_seconds=np.asarray(secs, np.float64)[None, :],
+        share_fractions=np.asarray(fracs, np.float64)[None, :],
+        backends=["scalar"], scalar_results=results, plan=plan)

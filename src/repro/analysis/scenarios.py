@@ -1,0 +1,164 @@
+"""Scenario-builder DSL — declarative what-if construction.
+
+Replaces hand-rolled ``sweep.Scenario`` dict construction with three
+builders that all produce :class:`ScenarioSpec` objects (accepted anywhere a
+``Scenario`` is — ``CompiledWorkflow.sweep``, ``sweep.analyze``,
+``ScenarioBatch``):
+
+* :func:`override` — one scenario from explicit replacement functions,
+* :func:`scale_resource` — one scenario per factor, scaling a *base*
+  allocation (resolved lazily against the workflow being swept),
+* :func:`grid` — the cartesian product over several override axes.
+
+Keys name inputs as ``"process.resource"`` / ``"process.datadep"`` strings
+(or explicit ``(process, name)`` tuples).  Values are either a replacement
+:class:`~repro.core.ppoly.PPoly` input function or a plain number, meaning
+*scale the workflow's base function by this factor* — for resource-rate
+inputs a rate multiplier, for external data inputs a time-axis speed-up
+(``I(t) -> I(factor * t)``, i.e. the data arrives ``factor``x faster).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping, Sequence, Union
+
+from repro.core.ppoly import PPoly
+from repro.core.workflow import Workflow
+from repro.sweep.batch import Scenario
+
+__all__ = ["ScenarioSpec", "grid", "override", "scale_resource", "speed_up_data"]
+
+#: a replacement input function, or a number meaning "scale the base"
+OverrideValue = Union[PPoly, float, int]
+#: "process.name" string or (process, name) tuple
+OverrideKey = Union[str, tuple[str, str]]
+
+
+def _key(k: OverrideKey) -> tuple[str, str]:
+    if isinstance(k, tuple):
+        proc, name = k
+        return str(proc), str(name)
+    if k.count(".") != 1:
+        raise ValueError(
+            f"override key {k!r} must be 'process.input' (one dot) or a "
+            "(process, input) tuple")
+    proc, name = k.split(".")
+    return proc, name
+
+
+def speed_up_data(fn: PPoly, factor: float) -> PPoly:
+    """``I(t) -> I(factor * t)``: the same data arrives ``factor``x faster."""
+    if factor <= 0.0:
+        raise ValueError("data speed-up factor must be > 0")
+    t0 = float(fn.starts[0]) / factor
+    return PPoly.compose(fn, PPoly.linear(t0 * factor, factor, start=t0))
+
+
+@dataclass
+class ScenarioSpec:
+    """A scenario as *intent*: overrides that may reference the base workflow.
+
+    Values that are plain numbers are resolved against the workflow's base
+    input functions at sweep time (``resolve``); explicit :class:`PPoly`
+    values are used as-is.  ``ScenarioBatch`` and ``CompiledWorkflow.sweep``
+    resolve specs automatically.
+    """
+
+    label: str = ""
+    resources: dict[tuple[str, str], OverrideValue] = field(default_factory=dict)
+    data: dict[tuple[str, str], OverrideValue] = field(default_factory=dict)
+
+    def resolve(self, workflow: Workflow | None) -> Scenario:
+        res: dict[tuple[str, str], PPoly] = {}
+        dat: dict[tuple[str, str], PPoly] = {}
+        for (proc, name), v in self.resources.items():
+            # keys from grid()/override() may name a data dep — reclassify
+            # against the workflow's process definitions when available
+            if (workflow is not None and proc in workflow.processes
+                    and name not in workflow.processes[proc].resources
+                    and name in workflow.processes[proc].data):
+                if isinstance(v, PPoly):
+                    dat[(proc, name)] = v
+                else:
+                    dat[(proc, name)] = speed_up_data(
+                        self._base(workflow, proc, name, "data"), float(v))
+                continue
+            if isinstance(v, PPoly):
+                res[(proc, name)] = v
+                continue
+            base = self._base(workflow, proc, name, "resource")
+            res[(proc, name)] = base * float(v)
+        for (proc, name), v in self.data.items():
+            if isinstance(v, PPoly):
+                dat[(proc, name)] = v
+                continue
+            base = self._base(workflow, proc, name, "data")
+            dat[(proc, name)] = speed_up_data(base, float(v))
+        return Scenario(label=self.label, resource_inputs=res, data_inputs=dat)
+
+    @staticmethod
+    def _base(workflow: Workflow | None, proc: str, name: str, kind: str) -> PPoly:
+        if workflow is None:
+            raise ValueError(
+                f"scenario scales {proc}.{name} by a factor but no base "
+                "workflow is available to resolve it against")
+        table = (workflow.resource_alloc if kind == "resource"
+                 else workflow.external_data)
+        fn = table.get(proc, {}).get(name)
+        if fn is None:
+            raise ValueError(
+                f"cannot scale {kind} input {proc!r}/{name!r}: the base "
+                f"workflow defines no such input function")
+        return fn
+
+
+def override(resources: Mapping[OverrideKey, OverrideValue] | None = None,
+             data: Mapping[OverrideKey, OverrideValue] | None = None,
+             label: str = "") -> ScenarioSpec:
+    """One scenario from explicit per-input overrides.
+
+    >>> scenarios.override({"dl1.link": PPoly.constant(2e6),
+    ...                     "task1.cpu": 2.0},           # 2x the base rate
+    ...                    label="fast-link")
+    """
+    return ScenarioSpec(
+        label=label,
+        resources={_key(k): v for k, v in (resources or {}).items()},
+        data={_key(k): v for k, v in (data or {}).items()})
+
+
+def scale_resource(proc: str, res: str, factors: Iterable[float],
+                   label_fmt: str = "{proc}.{res}x{factor:g}") -> list[ScenarioSpec]:
+    """One scenario per factor, scaling the base allocation of one resource.
+
+    The paper's "what do I gain if I give this bottleneck more resource"
+    question as a sweep axis (Sect. 8).
+    """
+    return [ScenarioSpec(label=label_fmt.format(proc=proc, res=res, factor=f),
+                         resources={(proc, res): float(f)})
+            for f in factors]
+
+
+def grid(axes: Mapping[OverrideKey, Sequence[OverrideValue]],
+         label_sep: str = ",") -> list[ScenarioSpec]:
+    """Cartesian product over override axes — ``prod(len(axis))`` scenarios.
+
+    >>> scenarios.grid({"dl1.link": [0.5, 1.0, 2.0],
+    ...                 "task1.cpu": [1.0, 4.0]})        # 6 scenarios
+    """
+    keys = [_key(k) for k in axes]
+    if not keys:
+        raise ValueError("grid needs at least one axis")
+    out: list[ScenarioSpec] = []
+    for combo in itertools.product(*axes.values()):
+        parts: list[str] = []
+        res: dict[tuple[str, str], OverrideValue] = {}
+        for (proc, name), v in zip(keys, combo):
+            res[(proc, name)] = v
+            tag = (f"{float(v):g}" if isinstance(v, (int, float))
+                   else f"<{type(v).__name__}>")
+            parts.append(f"{proc}.{name}={tag}")
+        out.append(ScenarioSpec(label=label_sep.join(parts), resources=res))
+    return out

@@ -135,24 +135,36 @@ def predict_makespan(frac_task1: float, *, recipe: str = "paper",
     return build_workflow(frac_task1, recipe=recipe, video_bytes=video_bytes).analyze().makespan
 
 
+def compile_paper_plan(frac_task1: float = 0.5, *, recipe: str = "paper",
+                       video_bytes: float = VIDEO_BYTES):
+    """The Sect. 5 workflow as a compile-once analysis plan.
+
+    The returned :class:`repro.analysis.plan.CompiledWorkflow` serves
+    ``solve()``, ``sweep()``, ``whatif()``, ``bottleneck_fn()`` and
+    ``gain()`` without re-deriving topo order, curves, or packing per call.
+    """
+    return build_workflow(frac_task1, recipe=recipe,
+                          video_bytes=video_bytes).compile()
+
+
 def sweep_scenarios(fracs, *, video_bytes: float = VIDEO_BYTES):
-    """The Fig. 7 prioritization sweep as :mod:`repro.sweep` scenarios.
+    """The Fig. 7 prioritization sweep as analysis scenarios.
 
     Each fraction becomes per-scenario link-allocation overrides on a shared
     base workflow (``build_workflow(0.5)``); process definitions stay
     identical across the batch, which is what lets the sweep engine run all
     of them in one batched pass.
     """
-    from repro.sweep import Scenario
+    from repro.analysis import scenarios
 
     out = []
     for f in np.asarray(fracs, dtype=np.float64):
         if not 0.0 < f < 1.0:
             raise ValueError("frac_task1 must be in (0, 1)")
         t1_dl_finish = video_bytes / (f * LINK_BPS)
-        out.append(Scenario(
+        out.append(scenarios.override(
             label=f"frac={f:.4f}",
-            resource_inputs={
+            resources={
                 ("dl1", "link"): PPoly.constant(f * LINK_BPS),
                 ("dl2", "link"): PPoly.step([0.0, t1_dl_finish],
                                             [(1.0 - f) * LINK_BPS, LINK_BPS]),

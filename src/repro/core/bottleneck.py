@@ -87,10 +87,5 @@ def potential_gains(wf: Workflow, base: WorkflowResult | None = None,
 
 
 def _clone(wf: Workflow) -> Workflow:
-    wf2 = Workflow()
-    wf2.processes = dict(wf.processes)
-    wf2.resource_alloc = {k: dict(v) for k, v in wf.resource_alloc.items()}
-    wf2.external_data = {k: dict(v) for k, v in wf.external_data.items()}
-    wf2.edges = list(wf.edges)
-    wf2.gates = {k: list(v) for k, v in wf.gates.items()}
-    return wf2
+    """Back-compat alias for :meth:`Workflow.clone`."""
+    return wf.clone()

@@ -17,8 +17,12 @@ Two dependency styles are supported, matching the paper's evaluation:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
 
 import numpy as np
+
+if TYPE_CHECKING:
+    from repro.analysis.plan import CompiledWorkflow
 
 from .ppoly import PPoly
 from .process import Process
@@ -68,17 +72,45 @@ class Workflow:
     def add(self, proc: Process, resources: dict[str, PPoly] | None = None,
             start_after: list[str] | None = None) -> "Workflow":
         if proc.name in self.processes:
-            raise ValueError(f"duplicate process {proc.name!r}")
+            raise ValueError(
+                f"duplicate process {proc.name!r}: each process may be "
+                "add()ed to a workflow only once")
+        if start_after:
+            # forward references are allowed (gates on processes added
+            # later); unknown names are rejected by validate()
+            self.gates[proc.name] = list(start_after)
         self.processes[proc.name] = proc
         self.resource_alloc[proc.name] = dict(resources or {})
         self.external_data.setdefault(proc.name, {})
-        if start_after:
-            self.gates[proc.name] = list(start_after)
         return self
 
     def connect(self, src: str, dst: str, dep: str, output: str = "out") -> "Workflow":
+        # fail fast on endpoints that are already known; forward references
+        # to not-yet-add()ed processes are fine and checked by validate()
+        if src in self.processes and output not in self.processes[src].outputs:
+            raise ValueError(
+                f"connect: process {src!r} has no output {output!r} "
+                f"(available: {sorted(self.processes[src].outputs)})")
+        if dst in self.processes and dep not in self.processes[dst].data:
+            raise ValueError(
+                f"connect: process {dst!r} declares no data dependency "
+                f"{dep!r} (declared: {sorted(self.processes[dst].data)})")
         self.edges.append(_Edge(src, output, dst, dep))
         return self
+
+    def clone(self) -> "Workflow":
+        """Shallow copy: shared process definitions, independent input maps.
+
+        What-if paths mutate the clone's allocations/external inputs without
+        touching the original (process objects are immutable by convention).
+        """
+        wf2 = Workflow()
+        wf2.processes = dict(self.processes)
+        wf2.resource_alloc = {k: dict(v) for k, v in self.resource_alloc.items()}
+        wf2.external_data = {k: dict(v) for k, v in self.external_data.items()}
+        wf2.edges = list(self.edges)
+        wf2.gates = {k: list(v) for k, v in self.gates.items()}
+        return wf2
 
     def set_data_input(self, proc: str, dep: str, fn: PPoly) -> "Workflow":
         self.external_data.setdefault(proc, {})[dep] = fn
@@ -108,11 +140,83 @@ class Workflow:
                         ready.append(m)
             ready.sort()
         if len(order) != len(self.processes):
-            raise ValueError("workflow dependency graph has a cycle")
+            stuck = sorted(set(self.processes) - set(order))
+            raise ValueError(
+                "workflow dependency graph has a cycle involving "
+                f"{stuck}; connect()/start_after dependencies must form a "
+                "DAG (the paper's stated limitation)")
         return order
 
-    def analyze(self) -> WorkflowResult:
+    def validate(self) -> list[str]:
+        """Check the workflow is analyzable; returns the topological order.
+
+        Raises ``ValueError`` with an actionable message on: edges or gates
+        naming unknown processes/outputs/deps, dependency cycles, data
+        dependencies with neither a connect()ed producer nor a
+        set_data_input() function, and declared resources without an
+        allocated input function.
+        """
+        for e in self.edges:
+            for role, n in (("source", e.src), ("destination", e.dst)):
+                if n not in self.processes:
+                    raise ValueError(
+                        f"connect: unknown {role} process {n!r}; add() it "
+                        f"(known: {sorted(self.processes)})")
+            if e.output not in self.processes[e.src].outputs:
+                raise ValueError(
+                    f"connect: process {e.src!r} has no output {e.output!r} "
+                    f"(available: {sorted(self.processes[e.src].outputs)})")
+            if e.dep not in self.processes[e.dst].data:
+                raise ValueError(
+                    f"connect: process {e.dst!r} declares no data dependency "
+                    f"{e.dep!r} (declared: {sorted(self.processes[e.dst].data)})")
+        for name, gs in self.gates.items():
+            for g in gs:
+                if g not in self.processes:
+                    raise ValueError(
+                        f"start_after gate {g!r} of process {name!r} is "
+                        f"unknown; add() it (known: {sorted(self.processes)})")
         order = self._topo_order()
+        edge_deps = {(e.dst, e.dep) for e in self.edges}
+        for name, proc in self.processes.items():
+            for dep in proc.data:
+                if ((name, dep) not in edge_deps
+                        and dep not in self.external_data.get(name, {})):
+                    raise ValueError(
+                        f"process {name!r} is missing data input {dep!r}: "
+                        "connect() an upstream output or provide it via "
+                        "set_data_input()")
+            for res in proc.resources:
+                if res not in self.resource_alloc.get(name, {}):
+                    raise ValueError(
+                        f"process {name!r} has no allocation for resource "
+                        f"{res!r}: pass resources={{...}} to add() or use "
+                        "set_resource_input()")
+        return order
+
+    def compile(self) -> "CompiledWorkflow":
+        """Compile-once front door: returns a query-many
+        :class:`repro.analysis.plan.CompiledWorkflow` that serves
+        ``solve()``, ``sweep()``, ``whatif()``, ``bottleneck_fn()`` and
+        ``gain()`` without re-deriving topo order, validation, scalar
+        curves, or the Pallas-ready array packing per call."""
+        from repro.analysis import compile_workflow
+
+        return compile_workflow(self)
+
+    def _solve_in_order(
+        self,
+        order: list[str],
+        resource_overrides: dict[tuple[str, str], PPoly] | None = None,
+        data_overrides: dict[tuple[str, str], PPoly] | None = None,
+    ) -> dict[str, ProgressResult]:
+        """The Algorithm-2 orchestration loop shared by :meth:`analyze` and
+        the compiled plan's scalar path: gates set ``t0`` to the latest
+        predecessor finish, edges wire upstream outputs into data inputs,
+        overrides (keyed ``(process, name)``) replace external data inputs /
+        resource allocations per query."""
+        res_over = resource_overrides or {}
+        data_over = data_overrides or {}
         results: dict[str, ProgressResult] = {}
         for name in order:
             proc = self.processes[name]
@@ -123,12 +227,21 @@ class Workflow:
                     raise ValueError(f"gate {g!r} of {name!r} never finishes")
                 t0 = max(t0, f)
             data_inputs: dict[str, PPoly] = dict(self.external_data.get(name, {}))
+            for (p, dep), fn in data_over.items():
+                if p == name:
+                    data_inputs[dep] = fn
             for e in self.edges:
                 if e.dst == name:
                     data_inputs[e.dep] = results[e.src].output_function(e.output)
-            missing = set(proc.data) - set(data_inputs)
-            if missing:
-                raise ValueError(f"process {name!r} missing data inputs {sorted(missing)}")
-            results[name] = solve(proc, data_inputs, self.resource_alloc.get(name, {}), t0=t0)
+            rin = dict(self.resource_alloc.get(name, {}))
+            for (p, res), fn in res_over.items():
+                if p == name:
+                    rin[res] = fn
+            results[name] = solve(proc, data_inputs, rin, t0=t0)
+        return results
+
+    def analyze(self) -> WorkflowResult:
+        order = self.validate()
+        results = self._solve_in_order(order)
         makespan = max((r.finish_time for r in results.values()), default=0.0)
         return WorkflowResult(results=results, makespan=makespan, order=order)

@@ -2,18 +2,22 @@
 
 BottleMod's selling point (Sect. 6/8) is that re-analysis is cheap enough to
 *try candidate allocations* online; Fig. 7 sweeps 600 link prioritizations.
-This package evaluates such sweeps as one batched pass instead of a Python
-loop over the scalar solver:
+This package holds the lockstep engine (:mod:`.engine`), the batched
+piecewise-linear algebra (:mod:`.plin`) and the scenario packing
+(:mod:`.batch`) that power those sweeps.
 
-    from repro import sweep
-    base = build_workflow(0.5)
-    scenarios = [sweep.Scenario(label=f"{f:.2f}", resource_inputs={...})
-                 for f in fracs]
-    res = sweep.analyze(base, scenarios)
-    res.top_k(5)                     # best allocations by makespan
-    res.bottleneck_report(res.best())
+The public front door moved to :mod:`repro.analysis` (compile-once /
+query-many)::
 
-Backends:
+    plan = workflow.compile()        # topo, validation, packing: ONCE
+    res = plan.sweep(scenarios)      # ...then sweep as often as you like
+    res.top_k(5); res.bottleneck_report(res.best())
+
+:func:`analyze` below is kept as a back-compat shim over that API; it
+re-compiles the workflow on every call, which is exactly the overhead the
+compiled plan avoids.
+
+Backends (``plan.sweep(..., backend=...)`` / ``analyze(..., backend=...)``):
 
 * ``"batched"`` — the lockstep engine of :mod:`.engine`: all scenarios
   advance one Algorithm-2 event per vectorized iteration; curve queries run
@@ -22,126 +26,43 @@ Backends:
   resource rate inputs (everything the paper's evaluation uses).
 * ``"loop"`` — the scalar :func:`repro.core.solver.solve` per scenario; the
   reference the batched engine must agree with to float tolerance.
-* ``"auto"`` (default) — batched, falling back to loop when a scenario is
-  outside the batched function class.
+* ``"auto"`` (default) — batched for every scenario inside the engine's
+  function class, scalar loop for the rest; the routing is recorded
+  per-scenario in ``Report.backends`` and summarized in a single warning.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.bottleneck import bottleneck_report
 from repro.core.workflow import Workflow
 
 from .batch import Scenario, ScenarioBatch
 from .engine import BatchProcResult, solve_batch
 from .plin import BPL, UnsupportedScenario, compose_scalar
-from .result import BottleneckRow, SweepResult
+from .result import BottleneckRow, Report, SweepResult
 
 __all__ = [
-    "Scenario", "ScenarioBatch", "SweepResult", "BottleneckRow",
+    "Scenario", "ScenarioBatch", "SweepResult", "Report", "BottleneckRow",
     "BatchProcResult", "BPL", "UnsupportedScenario", "analyze", "solve_batch",
     "compose_scalar",
 ]
 
 
 def analyze(workflow: Workflow, scenarios: list[Scenario],
-            backend: str = "auto") -> SweepResult:
+            backend: str = "auto") -> Report:
     """Analyze B what-if scenarios of ``workflow`` in one batched pass.
 
-    Returns a :class:`SweepResult` with per-scenario makespans, per-process
-    finish times, bottleneck shares, and top-k allocation ranking.
+    .. deprecated::
+        This is a back-compat shim that compiles the workflow on EVERY call
+        (validation, topo-sort, curve derivation, array packing).  Compile
+        once and sweep many instead::
+
+            plan = workflow.compile()
+            res = plan.sweep(scenarios)
+
+    Returns the unified :class:`repro.analysis.report.Report` (the old
+    ``SweepResult`` name is an alias) with per-scenario makespans, finish
+    times, bottleneck shares, rankings, and backend routing.
     """
-    batch = ScenarioBatch(workflow, scenarios)
-    if backend == "loop":
-        return _analyze_loop(batch)
-    try:
-        return _analyze_batched(batch)
-    except UnsupportedScenario:
-        if backend == "auto":
-            return _analyze_loop(batch)
-        raise
+    from repro.analysis import compile_workflow
 
-
-def _analyze_batched(batch: ScenarioBatch) -> SweepResult:
-    wf = batch.workflow
-    order = wf._topo_order()
-    B = batch.B
-    results: dict[str, BatchProcResult] = {}
-    progress: dict[str, BPL] = {}
-    for name in order:
-        proc = wf.processes[name]
-        t0 = np.zeros(B)
-        for g in wf.gates.get(name, []):
-            f = results[g].finish
-            if not np.all(np.isfinite(f)):
-                bad = int(np.argmin(np.isfinite(f)))
-                raise ValueError(f"gate {g!r} of {name!r} never finishes "
-                                 f"(scenario {bad})")
-            t0 = np.maximum(t0, f)
-        data_bpls: dict[str, BPL] = {}
-        for e in wf.edges:
-            if e.dst == name:
-                out_fn = wf.processes[e.src].outputs[e.output]
-                data_bpls[e.dep] = compose_scalar(out_fn, progress[e.src])
-        for dep in proc.data:
-            if dep not in data_bpls:
-                data_bpls[dep] = batch.data_bpl(name, dep)
-        res_bpls = {res: batch.resource_bpl(name, res)
-                    for res in wf.resource_alloc.get(name, {})}
-        results[name] = solve_batch(proc, data_bpls, res_bpls, t0)
-        progress[name] = results[name].progress
-    makespan = np.max(np.stack([r.finish for r in results.values()]), 0) \
-        if results else np.zeros(B)
-
-    factors: list[tuple[str, str, str]] = []
-    secs_cols, frac_cols = [], []
-    for name in order:
-        r = results[name]
-        fr = r.share_fractions()
-        for j, (kind, fac) in enumerate(zip(r.factor_kinds, r.factor_names)):
-            factors.append((name, kind, fac))
-            secs_cols.append(r.share_seconds[:, j])
-            frac_cols.append(fr[:, j])
-    return SweepResult(
-        labels=batch.labels(), order=order, makespan=makespan,
-        finish={n: results[n].finish for n in order}, factors=factors,
-        share_seconds=np.stack(secs_cols, 1) if secs_cols else np.zeros((B, 0)),
-        share_fractions=np.stack(frac_cols, 1) if frac_cols else np.zeros((B, 0)),
-        backend="batched", proc_results=results)
-
-
-def _analyze_loop(batch: ScenarioBatch) -> SweepResult:
-    """Reference backend: the scalar solver once per scenario."""
-    wf = batch.workflow
-    order = wf._topo_order()
-    B = batch.B
-    makespan = np.zeros(B)
-    finish = {n: np.zeros(B) for n in order}
-    fac_index: dict[tuple[str, str, str], int] = {}
-    secs_rows, frac_rows = [], []
-    for i in range(B):
-        wr = batch.apply(i).analyze()
-        makespan[i] = wr.makespan
-        for n in order:
-            finish[n][i] = wr.results[n].finish_time
-        secs: dict[tuple[str, str, str], float] = {}
-        fracs: dict[tuple[str, str, str], float] = {}
-        for b in bottleneck_report(wr):
-            key = (b.process, b.kind, b.name)
-            fac_index.setdefault(key, len(fac_index))
-            secs[key] = b.seconds
-            fracs[key] = b.fraction
-        secs_rows.append(secs)
-        frac_rows.append(fracs)
-    factors = sorted(fac_index, key=fac_index.__getitem__)
-    share_seconds = np.zeros((B, len(factors)))
-    share_fractions = np.zeros((B, len(factors)))
-    for i in range(B):
-        for j, key in enumerate(factors):
-            share_seconds[i, j] = secs_rows[i].get(key, 0.0)
-            share_fractions[i, j] = frac_rows[i].get(key, 0.0)
-    return SweepResult(labels=batch.labels(), order=order, makespan=makespan,
-                       finish=finish, factors=factors,
-                       share_seconds=share_seconds,
-                       share_fractions=share_fractions, backend="loop")
+    return compile_workflow(workflow).sweep(scenarios, backend=backend)

@@ -4,9 +4,10 @@ A :class:`Scenario` is a *delta* against a base :class:`~repro.core.Workflow`:
 per-process resource-rate inputs and/or external data-input functions to
 replace (the paper's Fig. 7 sweep varies exactly these — 600 different link
 prioritizations of the same five-process workflow).  :class:`ScenarioBatch`
-resolves every scenario's functions and packs them into padded batched arrays
-(via ``kernels/ppoly_eval/ops.pack_ppolys``) ready for the lockstep engine
-and the Pallas query kernels.
+resolves lazy :class:`~repro.analysis.scenarios.ScenarioSpec` objects
+against the base workflow and validates every override key; the packing into
+padded batched arrays lives in the compiled plan
+(:meth:`repro.analysis.plan.CompiledWorkflow._sweep_batched`).
 """
 
 from __future__ import annotations
@@ -15,8 +16,6 @@ from dataclasses import dataclass, field
 
 from repro.core.ppoly import PPoly
 from repro.core.workflow import Workflow
-
-from .plin import BPL
 
 
 @dataclass
@@ -40,7 +39,10 @@ class ScenarioBatch:
         if not scenarios:
             raise ValueError("need at least one scenario")
         self.workflow = workflow
-        self.scenarios = list(scenarios)
+        # lazy ScenarioSpec objects (repro.analysis.scenarios DSL) resolve
+        # their base-relative overrides against this workflow here
+        self.scenarios = [s.resolve(workflow) if hasattr(s, "resolve") else s
+                          for s in scenarios]
         self.B = len(scenarios)
         edge_deps = {(e.dst, e.dep) for e in workflow.edges}
         for i, sc in enumerate(self.scenarios):
@@ -61,39 +63,9 @@ class ScenarioBatch:
                         f"scenario {i}: data dep {proc!r}/{dep!r} is produced "
                         "by an upstream process and cannot be overridden")
 
-    # -- per-scenario function resolution ---------------------------------
-    def resource_ppolys(self, proc: str, res: str) -> list[PPoly]:
-        base = self.workflow.resource_alloc.get(proc, {}).get(res)
-        out = []
-        for sc in self.scenarios:
-            fn = sc.resource_inputs.get((proc, res), base)
-            if fn is None:
-                raise ValueError(f"no resource input for {proc!r}/{res!r}")
-            out.append(fn)
-        return out
-
-    def data_ppolys(self, proc: str, dep: str) -> list[PPoly]:
-        base = self.workflow.external_data.get(proc, {}).get(dep)
-        out = []
-        for sc in self.scenarios:
-            fn = sc.data_inputs.get((proc, dep), base)
-            if fn is None:
-                raise ValueError(f"no external data input for {proc!r}/{dep!r}")
-            out.append(fn)
-        return out
-
-    # -- packed batched forms ----------------------------------------------
-    def resource_bpl(self, proc: str, res: str) -> BPL:
-        return BPL.from_ppolys(self.resource_ppolys(proc, res))
-
-    def data_bpl(self, proc: str, dep: str) -> BPL:
-        return BPL.from_ppolys(self.data_ppolys(proc, dep))
-
     def apply(self, i: int) -> Workflow:
-        """Materialize scenario ``i`` as a standalone workflow (loop backend)."""
-        from repro.core.bottleneck import _clone
-
-        wf = _clone(self.workflow)
+        """Materialize scenario ``i`` as a standalone workflow."""
+        wf = self.workflow.clone()
         sc = self.scenarios[i]
         for (proc, res), fn in sc.resource_inputs.items():
             wf.resource_alloc.setdefault(proc, {})[res] = fn

@@ -75,19 +75,31 @@ def _res_tables(proc: Process):
 
 
 def solve_batch(proc: Process, data_bpls: dict[str, BPL],
-                res_bpls: dict[str, BPL], t0: np.ndarray) -> BatchProcResult:
-    """Solve one process for all B scenarios in lockstep."""
+                res_bpls: dict[str, BPL], t0: np.ndarray, *,
+                res_tables: list | None = None,
+                ceilings: dict[str, BPL] | None = None) -> BatchProcResult:
+    """Solve one process for all B scenarios in lockstep.
+
+    ``res_tables`` and ``ceilings`` let a compiled plan
+    (:class:`repro.analysis.plan.CompiledWorkflow`) pass in the static
+    requirement tables and pre-composed data ceilings it derived once at
+    compile time; both default to being derived here per call.
+    """
     B = len(t0)
     p_end = float(proc.total_progress)
     data_names = list(proc.data.keys())
     K = len(data_names)
-    res_tables = _res_tables(proc)
+    if res_tables is None:
+        res_tables = _res_tables(proc)
     res_names = [l for (l, *_rest) in res_tables]
     L = len(res_names)
 
-    # data ceilings P_Dk = R_Dk(I_Dk(t))  (eq. 1), batched composition
+    # data ceilings P_Dk = R_Dk(I_Dk(t))  (eq. 1), batched composition —
+    # unless the caller pre-composed them (plan cache)
+    ceilings = ceilings or {}
     if K:
-        ceils = [compose_scalar(proc.data[k].requirement, data_bpls[k])
+        ceils = [ceilings[k] if k in ceilings else
+                 compose_scalar(proc.data[k].requirement, data_bpls[k])
                  for k in data_names]
     else:
         ceils = [BPL.constant(np.full(B, p_end), t0)]

@@ -71,6 +71,20 @@ class BPL:
         return BPL(np.asarray(start, np.float64)[:, None], v[:, None],
                    np.zeros((len(v), 1)))
 
+    def broadcast(self, B: int) -> "BPL":
+        """Fan a single-row batch out to ``B`` rows as read-only views.
+
+        Zero-copy: this is how a compiled plan reuses its packed base input
+        functions across sweeps of any batch size (every engine query reads
+        but never mutates the arrays)."""
+        if self.B == B:
+            return self
+        if self.B != 1:
+            raise ValueError(f"can only broadcast a single-row BPL, got B={self.B}")
+        return BPL(np.broadcast_to(self.starts, (B, self.P)),
+                   np.broadcast_to(self.c0, (B, self.P)),
+                   np.broadcast_to(self.c1, (B, self.P)))
+
     # -- basics ------------------------------------------------------------
     @property
     def B(self) -> int:

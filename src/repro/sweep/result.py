@@ -1,126 +1,17 @@
-"""Sweep results: per-scenario makespans, bottleneck shares, rankings.
+"""Back-compat shim: ``SweepResult`` is the unified analysis ``Report``.
 
-:class:`SweepResult` is the batched analogue of
-:class:`repro.core.workflow.WorkflowResult` + :func:`repro.core.bottleneck.
-bottleneck_report` for every scenario at once.  The sampling accessors
-(:meth:`SweepResult.sample_progress`, :meth:`SweepResult.data_ceiling`,
-:meth:`SweepResult.kernel_finish_times`) run on the batched Pallas primitives
-of :mod:`repro.kernels.ppoly_eval` — evaluating hundreds of scenarios' curves
-is one kernel launch, not a Python loop.
+The sweep-specific result type of PR 1 was folded into the single
+:class:`repro.analysis.report.Report` that every query of a compiled
+workflow returns (scalar solve, batched sweep, what-if) — same accessors,
+same Pallas-backed curve queries, plus per-scenario backend recording.
+This module re-exports the old names so existing imports keep working.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from repro.analysis.report import BottleneckRow, Report, _pack_f32
 
-import numpy as np
+#: deprecated alias — use :class:`repro.analysis.report.Report`
+SweepResult = Report
 
-from .engine import BatchProcResult
-from .plin import BPL
-
-
-def _pack_f32(bpl: BPL):
-    """BPL (float64 numpy) -> (starts, coeffs) float32 for the Pallas ops."""
-    starts = bpl.starts.astype(np.float32)
-    coeffs = np.stack([bpl.c0, bpl.c1], -1).astype(np.float32)
-    return starts, coeffs
-
-
-@dataclass
-class BottleneckRow:
-    """One (process, limiting factor) share of one scenario — mirrors
-    :class:`repro.core.bottleneck.BottleneckShare`."""
-
-    process: str
-    kind: str
-    name: str
-    seconds: float
-    fraction: float
-
-
-@dataclass
-class SweepResult:
-    """Batched analysis of B what-if scenarios."""
-
-    labels: list[str]
-    order: list[str]
-    makespan: np.ndarray                       # (B,)
-    finish: dict[str, np.ndarray]              # per process (B,)
-    factors: list[tuple[str, str, str]]        # (process, kind, name)
-    share_seconds: np.ndarray                  # (B, n_factors)
-    share_fractions: np.ndarray                # (B, n_factors) of proc runtime
-    backend: str
-    proc_results: dict[str, BatchProcResult] | None = None
-
-    @property
-    def B(self) -> int:
-        return len(self.makespan)
-
-    # -- rankings ----------------------------------------------------------
-    def top_k(self, k: int = 5) -> list[tuple[int, str, float]]:
-        """The k best allocations: ``(index, label, makespan)`` ascending."""
-        idx = np.argsort(self.makespan, kind="stable")[:k]
-        return [(int(i), self.labels[int(i)], float(self.makespan[int(i)]))
-                for i in idx]
-
-    def best(self) -> int:
-        return int(np.argmin(self.makespan))
-
-    # -- attribution --------------------------------------------------------
-    def bottleneck_report(self, i: int) -> list[BottleneckRow]:
-        """Per-scenario report, same ordering contract as the scalar
-        :func:`repro.core.bottleneck.bottleneck_report` (sorted by seconds)."""
-        rows = [BottleneckRow(p, kind, name, float(self.share_seconds[i, j]),
-                              float(self.share_fractions[i, j]))
-                for j, (p, kind, name) in enumerate(self.factors)
-                if self.share_seconds[i, j] > 0.0]
-        rows.sort(key=lambda r: -r.seconds)
-        return rows
-
-    # -- batched curve queries (Pallas-backed) ------------------------------
-    def _proc(self, name: str) -> BatchProcResult:
-        if self.proc_results is None:
-            raise ValueError("curve queries need the batched backend")
-        return self.proc_results[name]
-
-    def sample_progress(self, proc: str, ts: np.ndarray, **kw) -> np.ndarray:
-        """``P(t)`` for every scenario at ``ts``: (B, T) float32, evaluated by
-        the batched ``ppoly_eval`` kernel."""
-        from repro.kernels.ppoly_eval import ppoly_eval
-
-        starts, coeffs = _pack_f32(self._proc(proc).progress)
-        q = np.broadcast_to(np.asarray(ts, np.float32), (self.B, len(ts)))
-        return np.asarray(ppoly_eval(starts, coeffs, q, **kw))
-
-    def data_ceiling(self, proc: str, ts: np.ndarray, **kw):
-        """``P_D(t) = min_k R_Dk(I_Dk(t))`` with argmin attribution for every
-        scenario at ``ts`` — one ``ppoly_min_eval`` kernel call.
-
-        Returns ``(vals (B,T) float32, argmin (B,T) int32)`` where the argmin
-        indexes the process's data deps in declaration order.
-        """
-        from repro.kernels.ppoly_eval import PAD_START, ppoly_min_eval
-
-        r = self._proc(proc)
-        packs = [_pack_f32(c) for c in r.ceilings]
-        P = max(s.shape[1] for s, _ in packs)
-        F = len(packs)
-        starts = np.full((self.B, F, P), PAD_START, np.float32)
-        coeffs = np.zeros((self.B, F, P, 2), np.float32)
-        for f, (s, c) in enumerate(packs):
-            starts[:, f, :s.shape[1]] = s
-            coeffs[:, f, :s.shape[1]] = c
-        q = np.broadcast_to(np.asarray(ts, np.float32), (self.B, len(ts)))
-        vals, arg = ppoly_min_eval(starts, coeffs, q, **kw)
-        return np.asarray(vals), np.asarray(arg)
-
-    def kernel_finish_times(self, proc: str, **kw) -> np.ndarray:
-        """Finish times re-derived on device: batched first-crossing of each
-        scenario's progress function with ``p_end`` (float32)."""
-        from repro.kernels.ppoly_eval import ppoly_first_crossing
-
-        r = self._proc(proc)
-        starts, coeffs = _pack_f32(r.progress)
-        y = np.full((self.B, 1), r.p_end, np.float32)
-        out = np.asarray(ppoly_first_crossing(starts, coeffs, y, **kw))[:, 0]
-        return np.where(out >= 1e29, np.inf, out.astype(np.float64))
+__all__ = ["BottleneckRow", "Report", "SweepResult", "_pack_f32"]

@@ -85,3 +85,30 @@ def test_golden_fig7_improvement():
     rb = sweep.analyze(base, sweep_scenarios([0.50, 0.93]), backend="batched")
     improvement = 1.0 - rb.makespan[1] / rb.makespan[0]
     assert improvement == pytest.approx(0.28994, abs=1e-4)
+
+
+def test_golden_compiled_api_reproduces_pinned_numbers():
+    """The compile-once front door hits the same pinned numbers as the
+    legacy paths — ``solve()`` vs ``Workflow.analyze()`` and ``sweep()`` vs
+    ``sweep.analyze`` (acceptance criterion of the Analysis API redesign)."""
+    plan = build_workflow(0.5).compile()
+    rep = plan.solve()
+    assert rep.makespan == pytest.approx(GOLDEN_MAKESPAN[0.50], rel=REL)
+    for name, expect in GOLDEN_FINISH[0.50].items():
+        assert rep.finish(name) == pytest.approx(expect, rel=REL), name
+    shares = {(r.process, r.kind, r.name): r.fraction for r in rep.shares()}
+    for key, expect in GOLDEN_SHARES[0.50].items():
+        assert shares[key] == pytest.approx(expect, rel=1e-6), key
+
+    swept = plan.sweep(sweep_scenarios([0.50, 0.95]), backend="batched")
+    legacy = sweep.analyze(build_workflow(0.5), sweep_scenarios([0.50, 0.95]),
+                           backend="batched")
+    np.testing.assert_array_equal(swept.makespan, legacy.makespan)
+    for i, frac in enumerate((0.50, 0.95)):
+        assert swept.makespan[i] == pytest.approx(GOLDEN_MAKESPAN[frac], rel=REL)
+        for name, expect in GOLDEN_FINISH[frac].items():
+            assert swept.finish[name][i] == pytest.approx(expect, rel=REL), name
+        got = {(r.process, r.kind, r.name): r.fraction
+               for r in swept.bottleneck_report(i)}
+        for key, expect in GOLDEN_SHARES[frac].items():
+            assert got[key] == pytest.approx(expect, rel=1e-6), key

@@ -1,0 +1,121 @@
+"""Workflow DAG validation: every misuse gets an actionable error.
+
+The construction-time checks (``add``/``connect``) and ``validate()`` (run
+by ``analyze()`` and ``compile()``) must reject malformed workflows with
+messages that tell the user what to fix — asserted here message by message.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import DataDep, PPoly, Process, ResourceDep, Workflow
+
+
+def _proc(name: str, deps=("in",), outs=True) -> Process:
+    p = Process(name,
+                data={d: DataDep.stream(100.0, 100.0) for d in deps},
+                resources={"cpu": ResourceDep.stream(10.0, 100.0)},
+                total_progress=100.0)
+    return p.identity_output() if outs else p
+
+
+def test_duplicate_add_rejected():
+    wf = Workflow()
+    wf.add(_proc("a"), resources={"cpu": PPoly.constant(1.0)})
+    with pytest.raises(ValueError, match=r"duplicate process 'a'.*only once"):
+        wf.add(_proc("a"), resources={"cpu": PPoly.constant(1.0)})
+
+
+def test_connect_unknown_process_rejected():
+    wf = Workflow()
+    wf.add(_proc("a"), resources={"cpu": PPoly.constant(1.0)})
+    wf.set_data_input("a", "in", PPoly.constant(100.0))
+    wf.connect("a", "ghost", "in")  # forward references are legal here...
+    with pytest.raises(ValueError,  # ...and caught when analysis starts
+                       match=r"unknown destination process 'ghost'.*add\(\)"):
+        wf.analyze()
+    wf2 = Workflow()
+    wf2.add(_proc("a"), resources={"cpu": PPoly.constant(1.0)})
+    wf2.connect("ghost", "a", "in")
+    with pytest.raises(ValueError,
+                       match=r"unknown source process 'ghost'.*add\(\)"):
+        wf2.compile()
+
+
+def test_connect_unknown_output_and_dep_rejected():
+    wf = Workflow()
+    wf.add(_proc("a"), resources={"cpu": PPoly.constant(1.0)})
+    wf.add(_proc("b"), resources={"cpu": PPoly.constant(1.0)})
+    with pytest.raises(ValueError, match=r"'a' has no output 'sideband'"):
+        wf.connect("a", "b", "in", output="sideband")
+    with pytest.raises(ValueError,
+                       match=r"'b' declares no data dependency 'nope'.*'in'"):
+        wf.connect("a", "b", "nope")
+
+
+def test_start_after_unknown_process_rejected():
+    wf = Workflow()
+    wf.add(_proc("a"), resources={"cpu": PPoly.constant(1.0)})
+    wf.set_data_input("a", "in", PPoly.constant(100.0))
+    wf.add(_proc("b"), resources={"cpu": PPoly.constant(1.0)},
+           start_after=["ghost"])
+    wf.set_data_input("b", "in", PPoly.constant(100.0))
+    with pytest.raises(ValueError,
+                       match=r"start_after gate 'ghost' of process 'b'.*add\(\) it"):
+        wf.analyze()
+
+
+def test_forward_references_stay_legal():
+    """Out-of-order construction (valid since the seed) must keep working:
+    gates and edges may name processes that are add()ed later."""
+    wf = Workflow()
+    wf.add(_proc("b"), resources={"cpu": PPoly.constant(1.0)},
+           start_after=["a"])
+    wf.connect("a", "b", "in")
+    wf.add(_proc("a"), resources={"cpu": PPoly.constant(1.0)})
+    wf.set_data_input("a", "in", PPoly.constant(100.0))
+    assert wf.validate() == ["a", "b"]
+    assert np.isfinite(wf.analyze().makespan)
+
+
+def test_cycle_rejected_with_members():
+    wf = Workflow()
+    wf.add(_proc("a"), resources={"cpu": PPoly.constant(1.0)})
+    wf.add(_proc("b"), resources={"cpu": PPoly.constant(1.0)})
+    wf.connect("a", "b", "in")
+    wf.connect("b", "a", "in")
+    with pytest.raises(ValueError, match=r"cycle involving \['a', 'b'\]"):
+        wf.analyze()
+    with pytest.raises(ValueError, match=r"cycle involving \['a', 'b'\]"):
+        wf.compile()
+
+
+def test_missing_data_input_rejected():
+    wf = Workflow()
+    wf.add(_proc("a"), resources={"cpu": PPoly.constant(1.0)})
+    with pytest.raises(ValueError,
+                       match=r"'a' is missing data input 'in'.*set_data_input"):
+        wf.analyze()
+    with pytest.raises(ValueError, match=r"missing data input 'in'"):
+        wf.compile()
+
+
+def test_missing_resource_allocation_rejected():
+    wf = Workflow()
+    wf.add(_proc("a"))  # declares cpu but allocates nothing
+    wf.set_data_input("a", "in", PPoly.constant(100.0))
+    with pytest.raises(ValueError,
+                       match=r"'a' has no allocation for resource 'cpu'.*"
+                             r"resources=\{\.\.\.\}|set_resource_input"):
+        wf.analyze()
+
+
+def test_valid_workflow_passes_validation():
+    wf = Workflow()
+    wf.add(_proc("a"), resources={"cpu": PPoly.constant(1.0)})
+    wf.set_data_input("a", "in", PPoly.constant(100.0))
+    wf.add(_proc("b"), resources={"cpu": PPoly.constant(1.0)},
+           start_after=["a"])
+    wf.connect("a", "b", "in")
+    assert wf.validate() == ["a", "b"]
+    assert wf.analyze().makespan > 0.0
