@@ -6,11 +6,19 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
 * Fig. 7  — 600-prioritization sweep (one batched ``repro.sweep`` pass),
             predictions vs DES ground truth
 * sweep   — batched engine vs looped scalar solver, us/scenario at B=600
+* resweep — prepared-pack re-sweeps on one compiled plan: jax fused engine
+            vs numpy lockstep vs the legacy re-compile-every-call shim
 * Fig. 8  — bottleneck structure at 50 % / 95 %
 * Sect. 6 — analysis runtime: BottleMod vs discrete-event simulation,
             1.1 GB vs 100 GB input (the headline scaling claim)
 * beyond-paper: BottleMod step model over a dry-run cell; ppoly_eval batched
   kernel vs naive loop; roofline table summary
+
+CLI: positional substrings filter benchmarks by name; ``--quick`` runs a
+small-B smoke subset (numpy + jax backends, CI-friendly); ``--compare
+OLD.json`` prints per-row speedups against a previous ``BENCH_sweep.json``
+and exits non-zero on a >20 % regression, so perf PRs carry their own
+before/after evidence.
 """
 
 from __future__ import annotations
@@ -24,14 +32,25 @@ import numpy as np
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 RESULTS = ROOT / "results"
 
+#: set by --quick: shrink batch sizes / rep counts to CI-smoke scale
+QUICK = False
+
+#: rows with us_per_call above old * (1 + threshold) fail --compare
+REGRESSION_THRESHOLD = 0.20
+
 
 def _time(fn, n=5, warmup=1):
+    """Min-of-n wall time (us): scheduling noise on a shared box only ever
+    ADDS time, so the min is the robust per-call cost (keeps the --compare
+    regression gate from tripping on load spikes)."""
     for _ in range(warmup):
         fn()
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(n):
+        t0 = time.perf_counter()
         fn()
-    return (time.perf_counter() - t0) / n * 1e6  # us
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def bench_fig4_example():
@@ -96,7 +115,7 @@ def bench_sweep_batched_vs_loop():
     from repro import sweep
     from repro.configs.paper_workflow import build_workflow, sweep_scenarios
     base = build_workflow(0.5)
-    B = 600
+    B = 60 if QUICK else 600
     scenarios = sweep_scenarios(np.linspace(0.02, 0.98, B))
     res = sweep.analyze(base, scenarios, backend="batched")  # warm caches
     t0 = time.perf_counter()
@@ -114,43 +133,57 @@ def bench_sweep_batched_vs_loop():
 
 
 def bench_compile_once_resweep():
-    """Acceptance row: repeated sweeps on ONE compiled plan vs the legacy
-    ``sweep.analyze`` shim that re-compiles (validates, topo-sorts, derives
-    curves, re-packs arrays) on every call.
+    """Acceptance row: repeated RE-SWEEPS of a prepared scenario pack on ONE
+    compiled plan — the fused jax lockstep engine — vs the per-call paths it
+    amortizes away: ``plan.sweep(list)`` (re-resolves + re-packs every call,
+    numpy lockstep) and the legacy ``sweep.analyze`` shim (additionally
+    re-compiles the workflow every call).
 
-    The two paths are measured interleaved (alternating order) and
-    summarized by their minima — scheduling noise on a shared box only ever
-    ADDS time, so with enough pairs the min is the robust per-call cost.
-    The compile cost the plan amortizes is also measured directly.
+    All paths are measured interleaved (rotating order) and summarized by
+    their minima — scheduling noise on a shared box only ever ADDS time, so
+    with enough rounds the min is the robust per-call cost.  The headline
+    ``us_per_call`` is the prepared-pack re-sweep at B=600 (B=48 in
+    ``--quick``), i.e. the cost of asking the same compiled plan one more
+    batch of what-if questions.
     """
     from repro import sweep
     from repro.configs.paper_workflow import build_workflow, sweep_scenarios
     base = build_workflow(0.5)
     parts = []
-    us_plan_600 = 0.0
-    for B, n in ((600, 40), (32, 60)):
+    us_pack_main = 0.0
+    sizes = ((48, 10),) if QUICK else ((600, 30), (32, 40))
+    for B, n in sizes:
         scenarios = sweep_scenarios(np.linspace(0.02, 0.98, B))
         t0 = time.perf_counter()
         plan = base.compile()
         us_compile = (time.perf_counter() - t0) * 1e6
-        plan.sweep(scenarios)                       # warm
+        t0 = time.perf_counter()
+        pack = plan.prepare(scenarios)
+        us_prepare = (time.perf_counter() - t0) * 1e6
+        plan.sweep(pack)                            # warm (jit compile)
+        plan.sweep(scenarios)
         sweep.analyze(base, scenarios)
-        tp, tl = [], []
+        tj, tp, tl = [], [], []
+        rot = [(tj, lambda: plan.sweep(pack)),
+               (tp, lambda: plan.sweep(scenarios)),
+               (tl, lambda: sweep.analyze(base, scenarios))]
         for k in range(n):
-            pair = [(tp, lambda: plan.sweep(scenarios)),
-                    (tl, lambda: sweep.analyze(base, scenarios))]
-            for sink, fn in (pair if k % 2 == 0 else pair[::-1]):
+            for sink, fn in rot[k % 3:] + rot[:k % 3]:
                 t0 = time.perf_counter()
                 fn()
                 sink.append((time.perf_counter() - t0) * 1e6)
-        us_plan, us_legacy = min(tp), min(tl)
-        if B == 600:
-            us_plan_600 = us_plan
-        parts.append(f"B={B}: plan.sweep={us_plan / 1e3:.1f}ms "
-                     f"legacy_analyze={us_legacy / 1e3:.1f}ms "
-                     f"speedup={us_legacy / us_plan:.2f}x "
-                     f"(compile once: {us_compile / 1e3:.2f}ms/call saved)")
-    return ("compile_once_resweep", us_plan_600, " ".join(parts))
+        us_pack, us_list, us_legacy = min(tj), min(tp), min(tl)
+        if B == sizes[0][0]:
+            us_pack_main = us_pack
+        parts.append(
+            f"B={B}: pack_resweep_jax={us_pack / 1e3:.2f}ms "
+            f"plan.sweep_numpy={us_list / 1e3:.1f}ms "
+            f"legacy_analyze={us_legacy / 1e3:.1f}ms "
+            f"resweep_speedup_vs_list={us_list / us_pack:.1f}x "
+            f"vs_legacy={us_legacy / us_pack:.1f}x "
+            f"(compile={us_compile / 1e3:.2f}ms prepare={us_prepare / 1e3:.2f}ms, "
+            "both once)")
+    return ("compile_once_resweep", us_pack_main, " ".join(parts))
 
 
 def bench_fig8_structure():
@@ -238,19 +271,25 @@ def bench_ppoly_kernel():
 
 
 def bench_roofline_summary():
+    """Summarize dry-run roofline cells.  This row is informational, never
+    timed: with no dryrun results it reports an explicit skip reason, and
+    with results it reports the cell summary — either way ``us_per_call``
+    stays ``None`` so ``--compare`` never gates on an I/O-bound number."""
     recs = []
     for p in sorted((RESULTS / "dryrun").glob("*.json")):
         r = json.loads(p.read_text())
         if r.get("status") == "ok" and not r.get("tag"):
             recs.append(r)
     if not recs:
-        return ("roofline_cells", 0.0, "no dryrun results yet — run repro.launch.dryrun --all")
+        return ("roofline_cells", None,
+                "skipped: no dryrun results under results/dryrun — run "
+                "`python -m repro.launch.dryrun --all` to populate this row")
     doms = {}
     for r in recs:
         doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
     ok_single = sum(1 for r in recs if r["mesh"] == "single")
     ok_multi = sum(1 for r in recs if r["mesh"] == "multi")
-    return ("roofline_cells", 0.0,
+    return ("roofline_cells", None,
             f"ok_cells single={ok_single} multi={ok_multi} dominant={doms}")
 
 
@@ -266,33 +305,131 @@ BENCHES = [
     bench_roofline_summary,
 ]
 
+#: DES-heavy rows skipped by --quick (they dominate wall time and do not
+#: exercise the sweep backends the smoke run is for)
+QUICK_SKIP = {"bench_fig7_sweep", "bench_perf_vs_des", "bench_stepmodel"}
+
 #: machine-readable per-benchmark wall times, tracked across PRs
 BENCH_JSON = ROOT / "BENCH_sweep.json"
+#: --quick writes here instead, so CI smoke runs (and devs trying --quick)
+#: never clobber the tracked full-run trajectory above
+BENCH_QUICK_JSON = ROOT / "BENCH_quick.json"
+
+
+def compare_rows(old_rows: list[dict], new_rows: list[dict],
+                 threshold: float = REGRESSION_THRESHOLD,
+                 ) -> tuple[list[str], list[str]]:
+    """Per-row speedup report between two BENCH_sweep row lists.
+
+    Returns ``(report_lines, regressions)``; a row regresses when its new
+    timing exceeds the old by more than ``threshold``.  Rows without a
+    usable timing on either side (skipped, errored, or 0.0 placeholders)
+    are reported but never gate.
+    """
+    old_by = {r["name"]: r for r in old_rows}
+    lines = [f"{'row':<34}{'old_us':>12}{'new_us':>12}{'speedup':>9}  note"]
+    regressions: list[str] = []
+    for nr in new_rows:
+        name = nr["name"]
+        orow = old_by.get(name)
+        nus = nr.get("us_per_call")
+        ous = orow.get("us_per_call") if orow else None
+        if orow is None:
+            new_col = f"{nus:12.1f}" if nus else f"{'-':>12}"
+            lines.append(f"{name:<34}{'-':>12}{new_col}{'-':>9}  new row")
+            continue
+        if not ous or not nus:  # None or 0.0: nothing comparable
+            lines.append(f"{name:<34}{'-':>12}{'-':>12}{'-':>9}  skipped "
+                         "(no timing on one side)")
+            continue
+        speedup = ous / nus
+        note = ""
+        if nus > ous * (1.0 + threshold):
+            note = f"REGRESSION (> {threshold:.0%} slower)"
+            regressions.append(name)
+        elif speedup >= 1.0 + threshold:
+            note = "improved"
+        lines.append(f"{name:<34}{ous:12.1f}{nus:12.1f}{speedup:8.2f}x  {note}")
+    return lines, regressions
 
 
 def main(argv: list[str] | None = None) -> None:
-    """Run all benchmarks (or those whose name contains an argv substring),
-    print the CSV rows, and record them in ``BENCH_sweep.json``."""
+    """Run benchmarks, print CSV rows, record ``BENCH_sweep.json``, and
+    optionally gate against a previous run (see module docstring)."""
+    import argparse
     import sys
-    filters = list(argv if argv is not None else sys.argv[1:])
+
+    global QUICK
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("filters", nargs="*",
+                    help="only run benchmarks whose name contains a substring")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small B, skip DES-heavy rows")
+    ap.add_argument("--compare", metavar="OLD_JSON",
+                    help="compare against a previous BENCH_sweep.json and "
+                         f"exit 1 on a >{REGRESSION_THRESHOLD:.0%} regression")
+    args = ap.parse_args(argv)
+    QUICK = args.quick
+    old_rows: list[dict] | None = None
+    old_quick = False
+    if args.compare:
+        old_payload = json.loads(pathlib.Path(args.compare).read_text())
+        old_rows = old_payload["rows"]
+        old_quick = bool(old_payload.get("quick"))
+
     rows = []
     print("name,us_per_call,derived")
     for fn in BENCHES:
-        if filters and not any(f in fn.__name__ for f in filters):
+        if args.filters and not any(f in fn.__name__ for f in args.filters):
+            continue
+        if QUICK and fn.__name__ in QUICK_SKIP:
             continue
         try:
+            import gc
+            gc.collect()  # normalize allocator/GC state between rows
             name, us, derived = fn()
-            print(f"{name},{us:.1f},{derived}")
-            rows.append({"name": name, "us_per_call": round(float(us), 1),
-                         "derived": derived})
-        except Exception as e:  # noqa: BLE001
+            if us is None:  # informational row: content, no gated timing
+                print(f"{name},-,{derived}")
+                rows.append({"name": name, "us_per_call": None,
+                             "derived": derived})
+            else:
+                print(f"{name},{us:.1f},{derived}")
+                rows.append({"name": name, "us_per_call": round(float(us), 1),
+                             "derived": derived})
+        except Exception as e:  # noqa: BLE001 — finish the other rows first
             print(f"{fn.__name__},NaN,ERROR:{type(e).__name__}:{e}")
             rows.append({"name": fn.__name__, "us_per_call": None,
                          "error": f"{type(e).__name__}: {e}"})
-    if not filters:  # partial runs must not clobber the tracked trajectory
-        BENCH_JSON.write_text(json.dumps({"schema": 1, "rows": rows},
-                                         indent=2) + "\n")
-        print(f"# wrote {BENCH_JSON.name} ({len(rows)} rows)")
+    # partial (filtered) runs must not clobber the tracked trajectory, and
+    # --quick rows (small B) go to their own file for the same reason
+    if not args.filters:
+        payload = {"schema": 1, "rows": rows}
+        if QUICK:
+            payload["quick"] = True
+        target = BENCH_QUICK_JSON if QUICK else BENCH_JSON
+        target.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"# wrote {target.name} ({len(rows)} rows)")
+    errored = [r["name"] for r in rows if "error" in r]
+    if old_rows is not None:
+        lines, regressions = compare_rows(old_rows, rows)
+        print(f"# --compare vs {args.compare}")
+        for ln in lines:
+            print("# " + ln)
+        if old_quick != QUICK:
+            # quick rows use smaller B — timings are not comparable, so
+            # report but never gate across quick/full runs
+            print(f"# NOTE: quick/full mismatch (old quick={old_quick}, "
+                  f"this run quick={QUICK}); regression gate skipped")
+        elif regressions:
+            print(f"# FAIL: {len(regressions)} row(s) regressed: "
+                  f"{', '.join(regressions)}")
+            sys.exit(1)
+        else:
+            print("# compare OK: no regressions")
+    if errored:  # a crashed benchmark must fail CI, compare mode or not
+        print(f"# FAIL: {len(errored)} benchmark(s) errored: "
+              f"{', '.join(errored)}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -3,6 +3,9 @@
     plan = workflow.compile()              # topo, validation, packing: ONCE
     plan.solve().makespan                  # exact scalar analysis
     plan.sweep(scenarios.grid({...}))      # B what-ifs, one batched pass
+    pack = plan.prepare(scs)               # resolve+classify+pack: ONCE
+    plan.sweep(pack)                       # re-sweep on the fused jax engine
+    plan.sweep(pack.shard(4))              # scenario axis over 4 devices
     plan.whatif(**{"task1.cpu": 2.0})      # one-off override query
     plan.bottleneck_fn()                   # piecewise overall bottleneck
     plan.gain(("task1", "cpu"))            # makespan won by relaxing it
@@ -13,6 +16,7 @@ see :mod:`repro.analysis.scenarios` for the scenario-builder DSL and
 """
 
 from .bottleneck import BottleneckFn, BottleneckInterval, derive_bottleneck_fn
+from .pack import ScenarioPack
 from .report import BottleneckRow, FinishTimes, Report, report_from_scalar
 from .scenarios import ScenarioSpec, grid, override, scale_resource, speed_up_data
 from . import scenarios
@@ -20,7 +24,7 @@ from .plan import CompiledWorkflow, compile_workflow
 
 __all__ = [
     "BottleneckFn", "BottleneckInterval", "BottleneckRow", "CompiledWorkflow",
-    "FinishTimes", "Report", "ScenarioSpec", "compile_workflow",
+    "FinishTimes", "Report", "ScenarioPack", "ScenarioSpec", "compile_workflow",
     "derive_bottleneck_fn", "grid", "override", "report_from_scalar",
     "scale_resource", "scenarios", "speed_up_data",
 ]

@@ -1,0 +1,241 @@
+"""Prepared scenario packs — resolve/validate/pack a sweep ONCE, re-sweep many.
+
+``plan.sweep(list)`` spends most of its time *outside* the solver: resolving
+:class:`~repro.analysis.scenarios.ScenarioSpec` factors against the base
+workflow, auditing the batched function class per scenario, and packing the
+override functions into padded ``(B, P)`` arrays.  A :class:`ScenarioPack`
+(from :meth:`CompiledWorkflow.prepare`) performs all of that exactly once and
+hands ``plan.sweep(pack)`` a solver-ready handle:
+
+* the resolved :class:`~repro.sweep.batch.Scenario` deltas (private copies —
+  mutating the caller's list or scenarios after ``prepare`` cannot leak in),
+* the batched/loop routing decision per scenario,
+* the padded override arrays, base-input single-row broadcasts, and
+  pre-composed data ceilings in the ``kernels/ppoly_eval`` layout.
+
+Re-sweep entry points::
+
+    pack = plan.prepare(scenarios)          # resolve+classify+pack: once
+    plan.sweep(pack)                        # compiled jax lockstep engine
+    plan.sweep(pack, backend="numpy")       # bit-identical to plan.sweep(list)
+    pack2 = pack.override({"dl1.link": 2.0})    # delta re-pack of ONE input
+    plan.sweep(pack.shard(4))               # scenario axis over 4 devices
+
+``shard(n)`` pads the batch to a multiple of the device count inside the
+engine; results are identical to single-device for any B.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.ppoly import PPoly
+from repro.sweep.batch import Scenario, ScenarioBatch
+from repro.sweep.plin import BPL, UnsupportedScenario, is_pw_constant
+
+__all__ = ["ScenarioPack"]
+
+
+def _copy_scenario(sc: Scenario) -> Scenario:
+    return Scenario(label=sc.label, resource_inputs=dict(sc.resource_inputs),
+                    data_inputs=dict(sc.data_inputs))
+
+
+@dataclass
+class ScenarioPack:
+    """A reusable, solver-ready sweep (see module docstring).
+
+    ``proc_args`` maps each process to its packed inputs for the batched
+    partition: ``{"res": {resource: BPL}, "data": {dep: BPL},
+    "ceil": {dep: BPL}}`` with ``BPL.B in (1, len(bat_idx))`` — single-row
+    entries are zero-copy broadcasts of the plan's base packing.
+    """
+
+    plan: Any = field(repr=False)
+    labels: list[str]
+    scenarios: list[Scenario] = field(repr=False)
+    bat_idx: list[int]
+    loop_idx: list[int]
+    reason: str | None
+    proc_args: dict[str, dict[str, dict[str, BPL]]] = field(repr=False)
+    shards: int = 1
+    #: per-(B, shards) device-array memo used by the jax engine so repeated
+    #: re-sweeps of one pack skip even the host->device transfer
+    _cache: dict = field(default_factory=dict, repr=False, compare=False)
+
+    # ------------------------------------------------------------------
+    @property
+    def B(self) -> int:
+        return len(self.scenarios)
+
+    @property
+    def B_batched(self) -> int:
+        return len(self.bat_idx)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def build(plan, scenario_list: Sequence, *, classify: bool = True,
+              ) -> "ScenarioPack":
+        """Resolve, classify, and pack ``scenario_list`` against ``plan``."""
+        batch = ScenarioBatch(plan.workflow, list(scenario_list))
+        scenarios = [_copy_scenario(sc) for sc in batch.scenarios]
+        labels = batch.labels()
+        B = len(scenarios)
+        if classify:
+            reasons = [plan._classify(sc) for sc in scenarios]
+            bat_idx = [i for i, r in enumerate(reasons) if r is None]
+            loop_idx = [i for i, r in enumerate(reasons) if r is not None]
+            reason = next((r for r in reasons if r is not None), None)
+        else:
+            bat_idx, loop_idx, reason = [], list(range(B)), None
+        proc_args: dict[str, dict[str, dict[str, BPL]]] = {}
+        if bat_idx:
+            try:
+                proc_args = _pack_proc_args(plan, [scenarios[i] for i in bat_idx])
+            except UnsupportedScenario as e:
+                # defensive: packing found an out-of-class construct the
+                # static audit missed — route everything to the scalar loop
+                loop_idx = sorted(loop_idx + bat_idx)
+                bat_idx, proc_args = [], {}
+                reason = reason or str(e)
+        return ScenarioPack(plan=plan, labels=labels, scenarios=scenarios,
+                            bat_idx=bat_idx, loop_idx=loop_idx, reason=reason,
+                            proc_args=proc_args)
+
+    # ------------------------------------------------------------------
+    def shard(self, n: int | None = None) -> "ScenarioPack":
+        """A copy of this pack whose batched partition runs sharded over
+        ``n`` devices (default: every local JAX device).
+
+        The engine pads the scenario axis up to a multiple of ``n`` (padding
+        rows replicate the last scenario and are sliced away), so any B
+        works; results are identical to the single-device sweep.  On CPU,
+        multiple devices need ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+        set before JAX initializes.
+        """
+        if n is None:
+            import jax
+            n = jax.local_device_count()
+        n = int(n)
+        if n < 1:
+            raise ValueError(f"shard count must be >= 1, got {n}")
+        return ScenarioPack(plan=self.plan, labels=self.labels,
+                            scenarios=self.scenarios, bat_idx=self.bat_idx,
+                            loop_idx=self.loop_idx, reason=self.reason,
+                            proc_args=self.proc_args, shards=n)
+
+    # ------------------------------------------------------------------
+    def override(self, inputs: Mapping[Any, Any]) -> "ScenarioPack":
+        """Delta re-pack: replace ONLY the named inputs, reuse everything else.
+
+        Keys are ``"process.input"`` strings or ``(process, input)`` tuples;
+        values are a single :class:`PPoly` (applied to every scenario), a
+        sequence of B PPolys, a number (scale the *base* input, resources as
+        a rate multiplier, data as a time-axis speed-up), or a sequence of B
+        numbers.  The replacement functions must stay inside the batched
+        function class — re-``prepare`` for anything richer.
+        """
+        from .scenarios import parse_key, speed_up_data
+
+        plan = self.plan
+        scenarios = [_copy_scenario(sc) for sc in self.scenarios]
+        proc_args = {name: {grp: dict(d) for grp, d in args.items()}
+                     for name, args in self.proc_args.items()}
+        for rawkey, value in inputs.items():
+            proc, name = parse_key(rawkey)
+            if proc not in plan.workflow.processes:
+                raise ValueError(f"override: unknown process {proc!r}")
+            p = plan.workflow.processes[proc]
+            is_res = name in p.resources
+            if not is_res and name not in p.data:
+                raise ValueError(
+                    f"override: process {proc!r} has no input {name!r} "
+                    f"(resources: {sorted(p.resources)}, data: {sorted(p.data)})")
+            key = (proc, name)
+            if not is_res and key in plan.edge_sources:
+                raise ValueError(
+                    f"override: data input {proc!r}/{name!r} is produced by "
+                    f"{plan.edge_sources[key]!r} and cannot be overridden")
+            base = (plan.base_res[key] if is_res else plan.base_data[key])
+            fns = _resolve_override_fns(value, base, self.B, is_res,
+                                        speed_up_data)
+            for i, sc in enumerate(scenarios):
+                (sc.resource_inputs if is_res else sc.data_inputs)[key] = fns[i]
+            for fn in fns:
+                bad = (not is_pw_constant(fn)) if is_res \
+                    else (not fn.is_piecewise_linear)
+                if bad:
+                    raise UnsupportedScenario(
+                        f"override for {proc}.{name} leaves the batched "
+                        "function class; use plan.prepare() on the new "
+                        "scenario list instead")
+            if self.bat_idx:
+                packed = BPL.from_ppolys([fns[i] for i in self.bat_idx])
+                grp = proc_args.setdefault(proc, {"res": {}, "data": {}, "ceil": {}})
+                if is_res:
+                    grp["res"][name] = packed
+                else:
+                    grp["ceil"].pop(name, None)
+                    grp["data"][name] = packed
+        return ScenarioPack(plan=plan, labels=self.labels, scenarios=scenarios,
+                            bat_idx=self.bat_idx, loop_idx=self.loop_idx,
+                            reason=self.reason, proc_args=proc_args,
+                            shards=self.shards)
+
+
+def _resolve_override_fns(value, base: PPoly, B: int, is_res: bool,
+                          speed_up_data) -> list[PPoly]:
+    def one(v) -> PPoly:
+        if isinstance(v, PPoly):
+            return v
+        return base * float(v) if is_res else speed_up_data(base, float(v))
+
+    if isinstance(value, PPoly) or np.isscalar(value):
+        fn = one(value)
+        return [fn] * B
+    fns = [one(v) for v in value]
+    if len(fns) != B:
+        raise ValueError(
+            f"override sequence has {len(fns)} entries for B={B} scenarios")
+    return fns
+
+
+def _pack_proc_args(plan, bats: list[Scenario]) -> dict:
+    """The per-call packing previously done inside the sweep, hoisted out.
+
+    Must mirror the numpy runner's expectations exactly — the bit-identity
+    of ``plan.sweep(pack)`` vs ``plan.sweep(list)`` on the numpy backend is
+    asserted by the test suite.
+    """
+    out: dict[str, dict[str, dict[str, BPL]]] = {}
+    for name in plan.order:
+        proc = plan.workflow.processes[name]
+        args: dict[str, dict[str, BPL]] = {"res": {}, "data": {}, "ceil": {}}
+        edge_deps = {dep for (_s, _o, dep) in plan.edges_in[name]}
+        for dep in proc.data:
+            if dep in edge_deps:
+                continue  # pipelined: composed from upstream progress in-solve
+            key = (name, dep)
+            over = [sc.data_inputs.get(key) for sc in bats]
+            if any(o is not None for o in over):
+                fns = [o if o is not None else plan.base_data[key]
+                       for o in over]
+                args["data"][dep] = BPL.from_ppolys(fns)
+            elif key in plan._base_ceil_row:
+                args["ceil"][dep] = plan._base_ceil_row[key]
+            else:
+                args["data"][dep] = BPL.from_ppolys([plan.base_data[key]])
+        for r in proc.resources:
+            key = (name, r)
+            over = [sc.resource_inputs.get(key) for sc in bats]
+            if any(o is not None for o in over):
+                fns = [o if o is not None else plan.base_res[key]
+                       for o in over]
+                args["res"][r] = BPL.from_ppolys(fns)
+            else:
+                args["res"][r] = plan._base_res_row[key]
+        out[name] = args
+    return out

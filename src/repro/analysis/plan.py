@@ -38,21 +38,25 @@ import numpy as np
 from repro.core.ppoly import PPoly
 from repro.core.solver import ProgressResult
 from repro.core.workflow import Workflow
-from repro.sweep.batch import Scenario, ScenarioBatch
+from repro.sweep.batch import Scenario
 from repro.sweep.engine import BatchProcResult, _res_tables, solve_batch
-from repro.sweep.plin import BPL, UnsupportedScenario, compose_scalar
+from repro.sweep.plin import (BPL, UnsupportedScenario, compose_scalar,
+                              is_pw_constant)
 
 from .bottleneck import BottleneckFn, derive_bottleneck_fn
+from .pack import ScenarioPack
 from .report import FinishTimes, Report, report_from_scalar, scalar_shares
-from .scenarios import ScenarioSpec, speed_up_data
+from .scenarios import ScenarioSpec, parse_key, speed_up_data
 
 __all__ = ["CompiledWorkflow", "compile_workflow"]
+
+#: engines selectable on ``CompiledWorkflow.sweep``
+SWEEP_BACKENDS = ("auto", "jax", "numpy", "batched", "loop")
 
 _FactorKey = tuple[str, str, str]
 
 
-def _pw_constant(fn: PPoly) -> bool:
-    return fn.coeffs.shape[1] == 1 or bool(np.all(fn.coeffs[:, 1:] == 0.0))
+_pw_constant = is_pw_constant
 
 
 def compile_workflow(workflow: Workflow) -> "CompiledWorkflow":
@@ -113,6 +117,7 @@ class CompiledWorkflow:
 
         self._base_report: Report | None = None
         self._bottleneck_fn: BottleneckFn | None = None
+        self._jax_engine: Any = None  # lazily-built JaxSweepEngine
 
     # ------------------------------------------------------------------
     # scalar path
@@ -162,10 +167,7 @@ class CompiledWorkflow:
         res_over: dict[tuple[str, str], PPoly] = {}
         data_over: dict[tuple[str, str], PPoly] = {}
         for key, v in overrides.items():
-            if key.count(".") != 1:
-                raise ValueError(
-                    f"override key {key!r} must be 'process.input'")
-            proc, name = key.split(".")
+            proc, name = parse_key(key)
             if proc not in self.workflow.processes:
                 raise ValueError(
                     f"what-if: unknown process {proc!r} "
@@ -283,44 +285,92 @@ class CompiledWorkflow:
     # ------------------------------------------------------------------
     # batched sweep path
     # ------------------------------------------------------------------
-    def sweep(self, scenario_list: Sequence[Scenario | ScenarioSpec],
+    def prepare(self, scenario_list: Sequence[Scenario | ScenarioSpec],
+                ) -> ScenarioPack:
+        """Resolve + classify + pack a sweep ONCE into a reusable handle.
+
+        ``plan.sweep(pack)`` then skips every per-call cost outside the
+        solver — spec resolution, function-class audit, array packing — and
+        routes the batched partition to the jit-compiled lockstep engine by
+        default.  See :class:`~repro.analysis.pack.ScenarioPack` for delta
+        re-packs (``pack.override``) and device sharding (``pack.shard``).
+
+        Note: the first pack sweep enables ``jax_enable_x64``
+        process-globally (the compiled engine needs float64 to match the
+        scalar solver); JAX code elsewhere in the process that relies on the
+        float32 default should pass explicit dtypes or use
+        ``backend="numpy"``.
+        """
+        return ScenarioPack.build(self, scenario_list)
+
+    def sweep(self, scenario_list: "Sequence[Scenario | ScenarioSpec] | ScenarioPack",
               backend: str = "auto") -> Report:
         """Analyze B what-if scenarios in one batched pass.
 
-        ``backend``: ``"batched"`` (lockstep engine, raises
-        :class:`UnsupportedScenario` for out-of-class scenarios), ``"loop"``
-        (scalar solver per scenario), or ``"auto"`` — batched for every
-        scenario inside the engine's function class, scalar loop for the
-        rest, with one summary warning when any scenario leaves the fast
-        path.  The backend each scenario ran on is recorded in
-        ``Report.backends``.
-        """
-        if backend not in ("auto", "batched", "loop"):
-            raise ValueError(f"unknown backend {backend!r} "
-                             "(expected auto|batched|loop)")
-        batch = ScenarioBatch(self.workflow, list(scenario_list))
-        scenarios = batch.scenarios
-        B = batch.B
-        if backend == "loop":
-            bat_idx: list[int] = []
-            loop_idx = list(range(B))
-            reason: str | None = None
-        else:
-            reasons = [self._classify(sc) for sc in scenarios]
-            bat_idx = [i for i, r in enumerate(reasons) if r is None]
-            loop_idx = [i for i, r in enumerate(reasons) if r is not None]
-            reason = next((r for r in reasons if r is not None), None)
-            if backend == "batched" and loop_idx:
-                raise UnsupportedScenario(
-                    f"scenario {loop_idx[0]} ({scenarios[loop_idx[0]].label or 'unlabeled'}): "
-                    f"{reason}")
+        ``scenario_list`` is either a list of scenarios/specs or a
+        :class:`ScenarioPack` from :meth:`prepare` (repeated sweeps of the
+        same candidate set should prepare once).
 
+        ``backend``:
+
+        * ``"jax"`` — the jit-compiled lockstep engine
+          (:mod:`repro.sweep.jax_engine`): the whole event loop and ceiling
+          algebra fused into one XLA call (float64; agrees with the numpy
+          engine to float tolerance).  Raises
+          :class:`UnsupportedScenario` for out-of-class scenarios.
+        * ``"numpy"`` (alias ``"batched"``) — the vectorized numpy lockstep
+          engine, the reference backend.  Same class restriction.
+        * ``"loop"`` — the exact scalar solver per scenario.
+        * ``"auto"`` — in-class scenarios go to the jax engine when a
+          prepared pack is passed (falling back to numpy if the compiled
+          path declines) and to the numpy engine for plain lists;
+          out-of-class scenarios fall back to the scalar loop with one
+          summary warning.  Per-scenario routing is recorded in
+          ``Report.backends``.
+        """
+        if backend not in SWEEP_BACKENDS:
+            raise ValueError(f"unknown backend {backend!r} "
+                             f"(expected {'|'.join(SWEEP_BACKENDS)})")
+        if isinstance(scenario_list, ScenarioPack):
+            pack = scenario_list
+            if pack.plan is not self:
+                raise ValueError(
+                    "ScenarioPack was prepared by a different plan; call "
+                    "prepare() on the plan you sweep")
+            prepared = True
+        else:
+            pack = ScenarioPack.build(self, scenario_list,
+                                      classify=(backend != "loop"))
+            prepared = False
+        B = pack.B
+        scenarios = pack.scenarios
+        bat_idx = list(pack.bat_idx)
+        loop_idx = list(pack.loop_idx)
+        reason = pack.reason
+        if backend == "loop":
+            bat_idx, loop_idx, reason = [], list(range(B)), None
+        elif backend != "auto" and loop_idx:
+            raise UnsupportedScenario(
+                f"scenario {loop_idx[0]} ({pack.labels[loop_idx[0]] or 'unlabeled'}): "
+                f"{reason}")
+
+        use_jax = backend == "jax" or (backend == "auto" and prepared)
         batched: dict[str, BatchProcResult] | None = None
+        engine_used = "batched"
         if bat_idx:
             try:
-                batched = self._sweep_batched([scenarios[i] for i in bat_idx])
+                if use_jax:
+                    try:
+                        batched = self._run_pack_jax(pack)
+                        engine_used = "jax"
+                    except UnsupportedScenario:
+                        if backend == "jax":
+                            raise
+                        batched = self._run_pack_numpy(pack)
+                else:
+                    batched = self._run_pack_numpy(pack)
             except UnsupportedScenario as e:
-                if backend == "batched":
+                if backend != "auto":
                     raise
                 # defensive: the engine found an out-of-class construct the
                 # static audit missed — run those scenarios on the loop
@@ -336,7 +386,7 @@ class CompiledWorkflow:
                 f"function class fell back to the scalar loop backend "
                 f"({reason}); see Report.backends for the per-scenario "
                 "routing", UserWarning, stacklevel=2)
-        return self._merge(batch, bat_idx, batched, loop_runs)
+        return self._merge(pack, bat_idx, batched, loop_runs, engine_used)
 
     def _classify(self, sc: Scenario) -> str | None:
         """None when the scenario fits the lockstep engine, else the reason."""
@@ -379,10 +429,10 @@ class CompiledWorkflow:
                         "piecewise-linear outputs")
         return None
 
-    def _sweep_batched(self, scenarios: list[Scenario]) -> dict[str, BatchProcResult]:
-        """The lockstep pass over the plan's pre-packed arrays."""
+    def _run_pack_numpy(self, pack: ScenarioPack) -> dict[str, BatchProcResult]:
+        """The numpy lockstep pass over the pack's pre-packed arrays."""
         wf = self.workflow
-        B = len(scenarios)
+        B = pack.B_batched
         results: dict[str, BatchProcResult] = {}
         progress: dict[str, BPL] = {}
         for name in self.order:
@@ -391,7 +441,8 @@ class CompiledWorkflow:
             for g in self.gates.get(name, []):
                 f = results[g].finish
                 if not np.all(np.isfinite(f)):
-                    bad = int(np.argmin(np.isfinite(f)))
+                    # report the caller's index, not the partition-local one
+                    bad = pack.bat_idx[int(np.argmin(np.isfinite(f)))]
                     raise ValueError(f"gate {g!r} of {name!r} never finishes "
                                      f"(scenario {bad})")
                 t0 = np.maximum(t0, f)
@@ -400,44 +451,77 @@ class CompiledWorkflow:
             for (src, output, dep) in self.edges_in[name]:
                 out_fn = wf.processes[src].outputs[output]
                 data_bpls[dep] = compose_scalar(out_fn, progress[src])
-            for dep in proc.data:
-                if dep in data_bpls:
-                    continue
-                key = (name, dep)
-                over = [sc.data_inputs.get(key) for sc in scenarios]
-                if any(o is not None for o in over):
-                    fns = [o if o is not None else self.base_data[key]
-                           for o in over]
-                    data_bpls[dep] = BPL.from_ppolys(fns)
-                elif key in self._base_ceil_row:
-                    ceilings[dep] = self._base_ceil_row[key].broadcast(B)
-                else:
-                    data_bpls[dep] = BPL.from_ppolys([self.base_data[key]]
-                                                     ).broadcast(B)
-            res_bpls: dict[str, BPL] = {}
-            for r in proc.resources:
-                key = (name, r)
-                over = [sc.resource_inputs.get(key) for sc in scenarios]
-                if any(o is not None for o in over):
-                    fns = [o if o is not None else self.base_res[key]
-                           for o in over]
-                    res_bpls[r] = BPL.from_ppolys(fns)
-                else:
-                    res_bpls[r] = self._base_res_row[key].broadcast(B)
+            args = pack.proc_args[name]
+            for dep, bpl in args["data"].items():
+                data_bpls[dep] = bpl.broadcast(B)
+            for dep, bpl in args["ceil"].items():
+                ceilings[dep] = bpl.broadcast(B)
+            res_bpls = {r: bpl.broadcast(B) for r, bpl in args["res"].items()}
             results[name] = solve_batch(proc, data_bpls, res_bpls, t0,
                                         res_tables=self.res_tables[name],
                                         ceilings=ceilings)
             progress[name] = results[name].progress
         return results
 
+    def _run_pack_jax(self, pack: ScenarioPack) -> dict[str, BatchProcResult]:
+        """The fused XLA pass: one compiled call for the whole sweep."""
+        from repro.sweep.jax_engine import JaxSweepEngine, LazyCeilings
+
+        if self._jax_engine is None:
+            self._jax_engine = JaxSweepEngine(self)
+        args = lambda: {  # noqa: E731 — built only on device-cache miss
+            name: {grp: {k: bpl.as_triple() for k, bpl in grp_args.items()}
+                   for grp, grp_args in proc_args.items()}
+            for name, proc_args in pack.proc_args.items()}
+        results = self._jax_engine.solve(args, pack.B_batched,
+                                         shards=pack.shards, cache=pack._cache,
+                                         scenario_ids=pack.bat_idx)
+        # the compiled run keeps its ceiling arrays on device; re-derive them
+        # host-side only if a curve query (Report.data_ceiling) asks.  The
+        # thunk captures just the packed inputs, not the pack (whose device
+        # cache would otherwise stay pinned for the Report's lifetime).
+        proc_args, B_bat = pack.proc_args, pack.B_batched
+        for name in self.order:
+            results[name].ceilings = LazyCeilings(
+                lambda name=name: self._derive_ceilings(
+                    proc_args, B_bat, results, name))
+        return results
+
+    def _derive_ceilings(self, proc_args: dict, B: int, results,
+                         name: str) -> list[BPL]:
+        """Numpy twin of the in-trace ceiling construction (lazy path)."""
+        wf = self.workflow
+        proc = wf.processes[name]
+        args = proc_args[name]
+        edge_fns = {dep: wf.processes[src].outputs[output]
+                    for (src, output, dep) in self.edges_in[name]}
+        edge_src = {dep: src for (src, _o, dep) in self.edges_in[name]}
+        ceils: list[BPL] = []
+        for dep in proc.data:
+            if dep in edge_fns:
+                inner = compose_scalar(edge_fns[dep],
+                                       results[edge_src[dep]].progress)
+                ceils.append(compose_scalar(proc.data[dep].requirement, inner))
+            elif dep in args["ceil"]:
+                ceils.append(args["ceil"][dep].broadcast(B))
+            else:
+                ceils.append(compose_scalar(proc.data[dep].requirement,
+                                            args["data"][dep].broadcast(B)))
+        if not ceils:
+            p_end = float(proc.total_progress)
+            ceils = [BPL.constant(np.full(B, p_end),
+                                  results[name].t_start.astype(np.float64))]
+        return ceils
+
     # ------------------------------------------------------------------
     # merge batched + loop partitions into one Report
     # ------------------------------------------------------------------
-    def _merge(self, batch: ScenarioBatch, bat_idx: list[int],
+    def _merge(self, pack: ScenarioPack, bat_idx: list[int],
                batched: dict[str, BatchProcResult] | None,
-               loop_runs: dict[int, dict[str, ProgressResult]]) -> Report:
-        B = batch.B
-        labels = batch.labels()
+               loop_runs: dict[int, dict[str, ProgressResult]],
+               engine_used: str = "batched") -> Report:
+        B = pack.B
+        labels = pack.labels
         makespans = np.zeros(B)
         finish = FinishTimes({n: np.zeros(B) for n in self.order})
         backends = ["loop"] * B
@@ -450,7 +534,7 @@ class CompiledWorkflow:
         if batched is not None and bat_idx:
             sub = np.asarray(bat_idx)
             for i in bat_idx:
-                backends[i] = "batched"
+                backends[i] = engine_used
             if self.order:
                 fins = np.stack([batched[n].finish for n in self.order])
                 makespans[sub] = fins.max(0)
@@ -495,4 +579,4 @@ class CompiledWorkflow:
             finish=finish, factors=factors, share_seconds=share_seconds,
             share_fractions=share_fractions, backends=backends,
             proc_results=batched if not loop_runs else None,
-            plan=self, scenarios=batch.scenarios)
+            plan=self, scenarios=pack.scenarios)

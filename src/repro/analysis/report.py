@@ -65,9 +65,7 @@ class FinishTimes(dict[str, np.ndarray]):
 
 def _pack_f32(bpl: Any) -> tuple[np.ndarray, np.ndarray]:
     """BPL (float64 numpy) -> (starts, coeffs) float32 for the Pallas ops."""
-    starts = bpl.starts.astype(np.float32)
-    coeffs = np.stack([bpl.c0, bpl.c1], -1).astype(np.float32)
-    return starts, coeffs
+    return bpl.kernel_args()
 
 
 @dataclass
@@ -101,9 +99,48 @@ class Report:
 
     @property
     def backend(self) -> str:
-        """Aggregate backend: ``batched`` / ``loop`` / ``scalar`` / ``mixed``."""
+        """Aggregate backend: ``jax`` / ``batched`` / ``loop`` / ``scalar`` /
+        ``mixed``."""
         kinds = set(self.backends)
         return self.backends[0] if len(kinds) == 1 else "mixed"
+
+    @property
+    def fallback_indices(self) -> list[int]:
+        """Scenario indices that fell back to the scalar ``loop`` backend."""
+        if self.is_scalar:
+            return []
+        return [i for i, b in enumerate(self.backends) if b == "loop"]
+
+    def summary(self) -> str:
+        """Human-readable digest: backend routing (surfacing the
+        scalar-fallback rate), makespan spread, and the best scenario."""
+        if self.is_scalar:
+            return (f"scalar analysis '{self.labels[0]}': "
+                    f"makespan={float(self.makespans[0]):.6g}s, "
+                    f"{len(self.factors)} bottleneck factor(s)")
+        counts: dict[str, int] = {}
+        for b in self.backends:
+            counts[b] = counts.get(b, 0) + 1
+        routing = ", ".join(f"{counts[b]} {b}" for b in
+                            ("jax", "batched", "loop") if b in counts)
+        lines = [f"sweep of {self.B} scenario(s) [{routing}]"]
+        fb = self.fallback_indices
+        if fb:
+            shown = ", ".join(str(i) for i in fb[:10])
+            more = f", ... (+{len(fb) - 10} more)" if len(fb) > 10 else ""
+            lines.append(
+                f"scalar fallback: {len(fb)}/{self.B} scenario(s) ran on the "
+                f"loop backend (indices [{shown}{more}])")
+        finite = self.makespans[np.isfinite(self.makespans)]
+        if len(finite):
+            i, label, ms = self.top_k(1)[0]
+            lines.append(f"makespan: best={ms:.6g}s (scenario {i}: {label!r}), "
+                         f"median={float(np.median(finite)):.6g}s, "
+                         f"worst={float(finite.max()):.6g}s")
+        n_inf = int((~np.isfinite(self.makespans)).sum())
+        if n_inf:
+            lines.append(f"{n_inf} scenario(s) never finish")
+        return "\n".join(lines)
 
     @property
     def makespan(self) -> Any:

@@ -28,7 +28,8 @@ from repro.core.ppoly import PPoly
 from repro.core.workflow import Workflow
 from repro.sweep.batch import Scenario
 
-__all__ = ["ScenarioSpec", "grid", "override", "scale_resource", "speed_up_data"]
+__all__ = ["ScenarioSpec", "grid", "override", "parse_key", "scale_resource",
+           "speed_up_data"]
 
 #: a replacement input function, or a number meaning "scale the base"
 OverrideValue = Union[PPoly, float, int]
@@ -36,7 +37,10 @@ OverrideValue = Union[PPoly, float, int]
 OverrideKey = Union[str, tuple[str, str]]
 
 
-def _key(k: OverrideKey) -> tuple[str, str]:
+def parse_key(k: OverrideKey) -> tuple[str, str]:
+    """Normalize an override key (``"proc.input"`` or tuple) to a tuple —
+    shared by the DSL builders, ``CompiledWorkflow.whatif``, and
+    ``ScenarioPack.override``."""
     if isinstance(k, tuple):
         proc, name = k
         return str(proc), str(name)
@@ -46,6 +50,9 @@ def _key(k: OverrideKey) -> tuple[str, str]:
             "(process, input) tuple")
     proc, name = k.split(".")
     return proc, name
+
+
+_key = parse_key  # internal alias used by the builders below
 
 
 def speed_up_data(fn: PPoly, factor: float) -> PPoly:

@@ -165,6 +165,18 @@ def pack_ppolys_np(ppolys, max_pieces: int | None = None, max_coef: int | None =
     return starts, coeffs
 
 
+def pack_bpl_np(starts, c0, c1, dtype=np.float32):
+    """BPL-layout triple ``(starts, c0, c1)`` -> kernel ``(starts, coeffs)``.
+
+    The sweep engines (numpy and jax) already keep every function batch in
+    this module's padded layout, so handing their outputs to the Pallas ops
+    is a dtype cast plus one coefficient stack — no re-packing.
+    """
+    starts = np.asarray(starts, dtype)
+    coeffs = np.stack([np.asarray(c0), np.asarray(c1)], -1).astype(dtype)
+    return starts, coeffs
+
+
 def pack_ppolys(ppolys, max_pieces: int | None = None, max_coef: int | None = None):
     """Pack a list of ``repro.core.ppoly.PPoly`` into padded (starts, coeffs).
 

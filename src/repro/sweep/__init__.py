@@ -19,16 +19,24 @@ compiled plan avoids.
 
 Backends (``plan.sweep(..., backend=...)`` / ``analyze(..., backend=...)``):
 
-* ``"batched"`` — the lockstep engine of :mod:`.engine`: all scenarios
-  advance one Algorithm-2 event per vectorized iteration; curve queries run
-  on the Pallas ``ppoly_eval`` / ``ppoly_min_eval`` / ``ppoly_first_crossing``
-  kernels.  Requires piecewise-linear data inputs and piecewise-constant
-  resource rate inputs (everything the paper's evaluation uses).
+* ``"jax"`` — the fused engine of :mod:`.jax_engine`: the same lockstep
+  event loop as ``lax.while_loop`` over stacked state, the whole workflow
+  (solves + ceiling compositions) in ONE jitted XLA call; float64.  With a
+  prepared :class:`~repro.analysis.pack.ScenarioPack` a re-sweep is a
+  single compiled dispatch.
+* ``"numpy"`` (alias ``"batched"``) — the lockstep engine of :mod:`.engine`:
+  all scenarios advance one Algorithm-2 event per vectorized numpy
+  iteration; the reference backend the jax engine must agree with.  Curve
+  queries run on the Pallas ``ppoly_eval`` / ``ppoly_min_eval`` /
+  ``ppoly_first_crossing`` kernels.  Both batched engines require
+  piecewise-linear data inputs and piecewise-constant resource rate inputs
+  (everything the paper's evaluation uses).
 * ``"loop"`` — the scalar :func:`repro.core.solver.solve` per scenario; the
-  reference the batched engine must agree with to float tolerance.
-* ``"auto"`` (default) — batched for every scenario inside the engine's
-  function class, scalar loop for the rest; the routing is recorded
-  per-scenario in ``Report.backends`` and summarized in a single warning.
+  reference the batched engines must agree with to float tolerance.
+* ``"auto"`` (default) — the fast path (jax for packs, numpy for lists) for
+  every scenario inside the batched function class, scalar loop for the
+  rest; the routing is recorded per-scenario in ``Report.backends``,
+  summarized in a single warning and by ``Report.summary()``.
 """
 
 from __future__ import annotations

@@ -6,8 +6,9 @@ replace (the paper's Fig. 7 sweep varies exactly these — 600 different link
 prioritizations of the same five-process workflow).  :class:`ScenarioBatch`
 resolves lazy :class:`~repro.analysis.scenarios.ScenarioSpec` objects
 against the base workflow and validates every override key; the packing into
-padded batched arrays lives in the compiled plan
-(:meth:`repro.analysis.plan.CompiledWorkflow._sweep_batched`).
+padded batched arrays lives in :class:`repro.analysis.pack.ScenarioPack`
+(built by ``CompiledWorkflow.prepare`` and by every ``plan.sweep(list)``
+call — prepare once to amortize it across re-sweeps).
 """
 
 from __future__ import annotations

@@ -14,6 +14,11 @@ ceiling-jumps, burst-resource stalls, data-limited ceiling following,
 resource-limited minimum-slope integration, starvation) so per-scenario
 results agree with the scalar solver to float tolerance — asserted by the
 test suite.
+
+This module is the REFERENCE backend: :mod:`.jax_engine` transcribes the
+same loop into a jitted ``lax.while_loop`` (one XLA call per sweep) and is
+pinned against it by ``tests/test_jax_engine.py``.  Semantic changes here
+(event cases, tolerances, record/attribution layout) must be mirrored there.
 """
 
 from __future__ import annotations

@@ -1,0 +1,814 @@
+"""Jit-compiled lockstep engine — the numpy engine fused into one XLA call.
+
+:mod:`.engine` advances every scenario one event per *Python* iteration; each
+iteration is a handful of numpy dispatches, so a sweep pays thousands of tiny
+host ops.  This module transcribes the same Algorithm-2 event loop — case for
+case, tolerance for tolerance — into ``jax.numpy`` float64 with the event
+loop as a ``jax.lax.while_loop`` over stacked ``(B,)`` state and fixed-shape
+``(B, R)`` record buffers, and the whole *workflow* (per-process solves plus
+the eq. (1) ceiling compositions along the DAG edges) traced into ONE jitted
+function.  A prepared :class:`~repro.analysis.pack.ScenarioPack` then makes a
+re-sweep a single compiled call: no resolution, no packing, no Python event
+loop.
+
+Layout is shared with :mod:`repro.kernels.ppoly_eval`: every function batch
+is a padded ``(B, P)`` triple ``(starts, c0, c1)`` using the kernels'
+``PAD_START`` sentinel, so engine outputs hand straight to the Pallas query
+ops without re-packing.
+
+The numpy engine stays the reference backend: the test suite asserts the two
+agree to float tolerance on makespans, finish times, progress curves, AND
+bottleneck attribution (``share_seconds``).
+
+Sharding: :meth:`JaxSweepEngine.solve` splits the scenario axis across
+devices with ``jax.pmap`` when built with ``shards > 1`` — each device runs
+the identical program on its ``B/D`` slice (no cross-device communication),
+so sharded results are bit-identical to single-device up to reduction order
+(there is none along B).  Callers pad B to a multiple of the device count
+(:meth:`ScenarioPack.shard`).
+
+Importing this module enables ``jax_enable_x64`` — the engine needs float64
+to match the scalar solver's tolerances.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402  (after the x64 switch)
+from jax import lax  # noqa: E402
+
+from repro.core.ppoly import PPoly, TIME_TOL, VAL_RTOL  # noqa: E402
+from repro.kernels.ppoly_eval.ref import PAD_START  # noqa: E402
+
+from .engine import BatchProcResult  # noqa: E402
+from .plin import BPL, UnsupportedScenario  # noqa: E402
+
+__all__ = ["JaxSweepEngine", "LazyCeilings", "DEFAULT_ITER_CAP", "MAX_ITER_CAP"]
+
+
+class LazyCeilings:
+    """List-like ceilings materialized on first access.
+
+    The compiled sweep does not ship its (re-derivable) ceiling arrays back
+    from the device — they are only read by the occasional
+    ``Report.data_ceiling`` query, and returning them taxes every re-sweep.
+    ``thunk`` recomputes them host-side (numpy ``compose_scalar``) on demand.
+    """
+
+    def __init__(self, thunk):
+        self._thunk = thunk
+        self._val: list | None = None
+
+    def _get(self) -> list:
+        if self._val is None:
+            self._val = list(self._thunk())
+            self._thunk = None
+        return self._val
+
+    def __iter__(self):
+        return iter(self._get())
+
+    def __getitem__(self, i):
+        return self._get()[i]
+
+    def __len__(self):
+        return len(self._get())
+
+_INF = float("inf")
+
+#: initial lockstep iteration budget of the compiled loop (events per
+#: scenario are typically a handful); doubled adaptively up to MAX_ITER_CAP
+#: when a solve reports overflow, at the cost of one recompile per doubling.
+#: Kept small on purpose: record buffers, progress pieces, and downstream
+#: ceiling compositions all scale with the budget, so an oversized cap taxes
+#: EVERY sweep to spare rare ones a recompile.
+DEFAULT_ITER_CAP = 8
+MAX_ITER_CAP = 1024
+
+
+# ---------------------------------------------------------------------------
+# batched piecewise-linear algebra on (starts, c0, c1) triples — the jnp
+# transcription of repro.sweep.plin.BPL (identical semantics, float64)
+# ---------------------------------------------------------------------------
+
+def _valid(s):
+    return s < PAD_START * 0.5
+
+
+def _piece_idx(s, t, tol):
+    """Piece index per query: ``s (..., P)``, ``t (...)`` -> ``(...)``."""
+    cmp = s <= (t[..., None] + tol)
+    return jnp.maximum(cmp.sum(-1) - 1, 0)
+
+
+def _gather(a, i):
+    return jnp.take_along_axis(a, i[..., None], -1)[..., 0]
+
+
+def _eval(f, t, tol):
+    s, c0, c1 = f
+    i = _piece_idx(s, t, tol)
+    return _gather(c0, i) + _gather(c1, i) * (t - _gather(s, i))
+
+
+def _eval_right(f, t):
+    return _eval(f, t, TIME_TOL)
+
+
+def _eval_left(f, t):
+    return _eval(f, t, -TIME_TOL)
+
+
+def _eval_slope_right(f, t):
+    """(value, slope) at ``t`` sharing one piece-index computation."""
+    s, c0, c1 = f
+    i = _piece_idx(s, t, TIME_TOL)
+    sl = _gather(c1, i)
+    return _gather(c0, i) + sl * (t - _gather(s, i)), sl
+
+
+def _slope_right(f, t):
+    s, _c0, c1 = f
+    return _gather(c1, _piece_idx(s, t, TIME_TOL))
+
+
+def _next_break(f, t):
+    """Smallest start ``> t + TIME_TOL`` over ALL leading dims but B."""
+    s = f[0]
+    cand = jnp.where(_valid(s) & (s > t[..., None] + TIME_TOL), s, _INF)
+    return cand.min(-1)
+
+
+def _first_at_or_above(f, y, t_lo=None):
+    s, c0, c1 = f
+    y_ = y[..., None]
+    nxt = jnp.concatenate([s[..., 1:], jnp.full(s.shape[:-1] + (1,), PAD_START)],
+                          -1)
+    plen = nxt - s
+    tol = VAL_RTOL * jnp.maximum(1.0, jnp.abs(y_)) + 1e-12
+    cand = jnp.where(c0 >= y_ - tol, s, _INF)
+    u = (y_ - c0) / jnp.where(c1 > 0, c1, 1.0)
+    ok = (c1 > 0) & (c0 < y_ - tol) & (u <= plen + TIME_TOL)
+    cand = jnp.minimum(cand, jnp.where(ok, s + u, _INF))
+    cand = jnp.where(_valid(s), cand, _INF)
+    out = cand.min(-1)
+    if t_lo is not None:
+        out = jnp.where(jnp.isfinite(out), jnp.maximum(out, t_lo), out)
+    return out
+
+
+def _antiderivative(f):
+    s, c0, _c1 = f
+    nxt = jnp.concatenate([s[..., 1:], jnp.full(s.shape[:-1] + (1,), PAD_START)],
+                          -1)
+    plen = jnp.where(nxt < PAD_START * 0.5, nxt - s, 0.0)
+    areas = jnp.where(_valid(s), c0 * plen, 0.0)
+    acc = jnp.concatenate([jnp.zeros(s.shape[:-1] + (1,)),
+                           jnp.cumsum(areas, -1)[..., :-1]], -1)
+    return (s, acc, c0)
+
+
+def _stack_triples(triples):
+    """Stack per-function (B, P_k) triples into one (F, B, Pmax) triple."""
+    Pm = max(tr[0].shape[-1] for tr in triples)
+
+    def padded(tr):
+        s, c0, c1 = tr
+        extra = Pm - s.shape[-1]
+        if extra:
+            s = jnp.concatenate(
+                [s, jnp.full(s.shape[:-1] + (extra,), PAD_START)], -1)
+            c0 = jnp.concatenate([c0, jnp.zeros(c0.shape[:-1] + (extra,))], -1)
+            c1 = jnp.concatenate([c1, jnp.zeros(c1.shape[:-1] + (extra,))], -1)
+        return s, c0, c1
+
+    ps = [padded(tr) for tr in triples]
+    return tuple(jnp.stack([p[k] for p in ps]) for k in range(3))
+
+
+def _insert_col(S, V, SL, cs, cv, csl):
+    """Insert one (start, value, slope) column into row-sorted triples —
+    a shifted-select, O(B*P), in place of a row sort."""
+    P = S.shape[1]
+    pos = (S <= cs[:, None]).sum(1)[:, None]
+    j = jnp.arange(P + 1)[None, :]
+
+    def ins(X, xcol):
+        below = jnp.concatenate([X, X[:, -1:]], 1)       # X_j   (j < pos)
+        above = jnp.concatenate([X[:, :1], X], 1)        # X_{j-1} (j > pos)
+        return jnp.where(j < pos, below,
+                         jnp.where(j == pos, xcol[:, None], above))
+
+    return ins(S, cs), ins(V, cv), ins(SL, csl)
+
+
+def _compose(outer, inner, B):
+    """``outer(inner(t))`` for a static scalar pw-linear ``outer`` (np triple)
+    and a batched monotone ``inner`` — plin.compose_scalar in jnp.
+
+    The numpy twin concatenates breakpoint candidates, row-sorts them, and
+    re-evaluates the inner function at every merged start.  Here the inner
+    pieces already carry their (value, slope) at their own starts (``c0``,
+    ``c1``), so only the outer-breakpoint crossings — one ``(B,)`` column per
+    outer piece — need evaluating, and each column is merged by positional
+    insertion.  No sort, no (B, M, P) evaluation blowup: XLA on CPU pays
+    dearly for both.
+    """
+    S, V, SL = inner
+    if len(outer[0]) == 1:  # single-piece outer: a pure affine transform
+        s0, a0, a1 = (float(x[0]) for x in outer)
+        pad = S >= PAD_START * 0.5
+        return (S, jnp.where(pad, 0.0, a0 + a1 * (V - s0)),
+                jnp.where(pad, 0.0, a1 * SL))
+    o_s, o_c0, o_c1 = (jnp.asarray(a) for a in outer)
+    for v in outer[0][1:]:  # static python loop over outer breakpoints
+        cross = _first_at_or_above(inner, jnp.full(B, float(v)))
+        cs = jnp.where(jnp.isfinite(cross), cross, PAD_START)
+        cv = _eval_right(inner, cs)
+        csl = _slope_right(inner, cs)
+        S, V, SL = _insert_col(S, V, SL, cs, cv, csl)
+    oi = jnp.maximum(jnp.searchsorted(o_s, V + TIME_TOL, side="right") - 1, 0)
+    c0 = o_c0[oi] + o_c1[oi] * (V - o_s[oi])
+    c1 = o_c1[oi] * SL
+    pad = S >= PAD_START * 0.5
+    return (S, jnp.where(pad, 0.0, c0), jnp.where(pad, 0.0, c1))
+
+
+# ---------------------------------------------------------------------------
+# static workflow structure (everything the trace closes over)
+# ---------------------------------------------------------------------------
+
+def _ppoly_triple(fn: PPoly):
+    if not fn.is_piecewise_linear:
+        raise UnsupportedScenario(
+            f"jax engine requires piecewise-linear functions (degree {fn.degree})")
+    s = fn.starts.astype(np.float64)
+    c0 = fn.coeffs[:, 0].astype(np.float64)
+    c1 = (fn.coeffs[:, 1].astype(np.float64) if fn.coeffs.shape[1] > 1
+          else np.zeros(len(s)))
+    return s, c0, c1
+
+
+@dataclass(frozen=True)
+class _ProcSpec:
+    name: str
+    p_end: float
+    data_names: tuple[str, ...]
+    gate_names: tuple[str, ...]
+    #: dep -> (src process, output-fn triple) for pipelined (edge-fed) deps
+    edges: dict
+    #: dep -> requirement triple for external deps (ceiling composition)
+    reqs: dict
+    res_names: tuple[str, ...]
+    #: per resource: (breakpoints, marginal slopes, jump magnitudes)
+    res_tables: tuple
+
+
+@dataclass(frozen=True)
+class _WorkflowSpec:
+    procs: tuple[_ProcSpec, ...]
+
+    @staticmethod
+    def from_plan(plan) -> "_WorkflowSpec":
+        wf = plan.workflow
+        procs = []
+        for name in plan.order:
+            proc = wf.processes[name]
+            edges = {dep: (src, _ppoly_triple(wf.processes[src].outputs[out]))
+                     for (src, out, dep) in plan.edges_in[name]}
+            reqs = {d: _ppoly_triple(dd.requirement)
+                    for d, dd in proc.data.items()}
+            tables = tuple((rb, rc1, jumps)
+                           for (_l, rb, rc1, jumps) in plan.res_tables[name])
+            procs.append(_ProcSpec(
+                name=name, p_end=float(proc.total_progress),
+                data_names=tuple(proc.data.keys()),
+                gate_names=tuple(plan.gates.get(name, [])),
+                edges=edges, reqs=reqs,
+                res_names=tuple(l for (l, *_r) in plan.res_tables[name]),
+                res_tables=tables))
+        return _WorkflowSpec(tuple(procs))
+
+
+# ---------------------------------------------------------------------------
+# one process: the Algorithm-2 lockstep loop as lax.while_loop
+# ---------------------------------------------------------------------------
+
+def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
+    """Mirror of ``engine.solve_batch``'s event loop with fixed-size record
+    buffers (two slots per iteration: burst-stall, then movement).
+
+    All ceilings are stacked into one ``(nC, B, P)`` triple and all resource
+    inputs into ``(L, B, P)`` so every per-iteration query is a single
+    fused-width op rather than a Python loop of per-function ops — XLA on
+    CPU pays per-op dispatch, so op count is what the loop body optimizes.
+    """
+    p_end = ps.p_end
+    nC = len(ceils)
+    K = len(ps.data_names)
+    L = len(ps.res_names)
+    # static structure flags: burst-free resources skip the whole stall
+    # machinery (and its record slot), the single-ceiling / single-resource
+    # cases skip their argmin bookkeeping — XLA on CPU pays per op, so dead
+    # generality in the loop body is a per-iteration tax on every sweep
+    has_jumps = any(np.any(jumps > 0) for (_rb, _c, jumps) in ps.res_tables)
+    spi = 2 if has_jumps else 1                       # record slots per iter
+    R = spi * iter_cap
+    C = _stack_triples(ceils)                                   # (nC, B, P)
+    if L:
+        IRs = _stack_triples(IR)                                # (L, B, P)
+        As = _antiderivative(IRs) if has_jumps else None
+        n_rb = max(len(rb) for (rb, _c, _j) in ps.res_tables)
+        rbs = np.full((L, n_rb), _INF)
+        rc1s = np.zeros((L, n_rb))
+        jumpss = np.zeros((L, n_rb))
+        for li, (rb, rc1, jumps) in enumerate(ps.res_tables):
+            rbs[li, :len(rb)] = rb
+            rc1s[li, :len(rb)] = rc1
+            jumpss[li, :len(rb)] = jumps
+        rbs, rc1s, jumpss = (jnp.asarray(a)[:, None, :]         # (L, 1, n_rb)
+                             for a in (rbs, rc1s, jumpss))
+    else:
+        n_rb = 1
+    ptol = 1e-9 * max(1.0, p_end)
+    ftol = 1e-9 * max(1.0, p_end)
+    jtol = 1e-12 * max(1.0, p_end)
+
+    def cond(st):
+        return (st["it"] < iter_cap) & jnp.any(st["active"]
+                                               & (st["p"] < p_end - ftol))
+
+    def body(st):
+        t, p = st["t"], st["p"]
+        finish, active = st["finish"], st["active"]
+        absorbed = st["absorbed"]                               # (L, B, n_rb)
+        it = st["it"]
+        act = active & (p < p_end - ftol)
+
+        # ---- ceilings at t (right values/slopes + attribution) -------------
+        tC = jnp.broadcast_to(t, (nC, B))
+        V, S = _eval_slope_right(C, tC)                         # (nC, B)
+        if nC > 1:
+            kstar = jnp.argmin(V, 0)
+            pd = jnp.take_along_axis(V, kstar[None], 0)[0]
+            pdslope = jnp.take_along_axis(S, kstar[None], 0)[0]
+        else:
+            kstar = jnp.zeros(B, jnp.int32)
+            pd, pdslope = V[0], S[0]
+        tb_ceil = _next_break(C, tC).min(0)
+
+        # ---- resource caps and next requirement breakpoints ----------------
+        if L:
+            tL = jnp.broadcast_to(t, (L, B))
+            r_now = _eval_right(IRs, tL)                        # (L, B)
+            tb_ir = _next_break(IRs, tL).min(0)
+            # searchsorted(rb, p + ptol, "right") - 1, per resource row
+            ri = jnp.maximum((rbs <= (p[None, :, None] + ptol)).sum(-1) - 1, 0)
+            cl = _gather(jnp.broadcast_to(rc1s, (L, B, n_rb)), ri)
+            caps = jnp.where(cl > 0, r_now / jnp.where(cl > 0, cl, 1.0), _INF)
+            if has_jumps:
+                cond_bp = ((rbs >= p[None, :, None] - ptol) & ~absorbed
+                           & ((jumpss > 0) | (rbs > p[None, :, None] + ptol)))
+            else:  # no jumps: nothing is ever absorbed, zero-jump rule only
+                cond_bp = (rbs >= p[None, :, None] - ptol) \
+                    & (rbs > p[None, :, None] + ptol)
+            has = cond_bp.any(-1)
+            pbidx = jnp.argmax(cond_bp, -1)                     # (L, B)
+            pb = jnp.where(has,
+                           _gather(jnp.broadcast_to(rbs, (L, B, n_rb)), pbidx),
+                           _INF)
+            if L > 1:
+                smin = caps.min(0)
+                lstar = caps.argmin(0)
+            else:
+                smin = caps[0]
+                lstar = jnp.zeros(B, jnp.int32)
+            if has_jumps:
+                pjump = jnp.where(
+                    has, _gather(jnp.broadcast_to(jumpss, (L, B, n_rb)), pbidx),
+                    0.0)
+        else:
+            tb_ir = jnp.full(B, _INF)
+            smin = jnp.full(B, _INF)
+            lstar = jnp.zeros(B, kstar.dtype)
+            pb = jnp.zeros((0, B))
+
+        # ---- unconstrained: jump instantly toward the data ceiling ---------
+        uncon = act & ~jnp.isfinite(smin) & (p < pd - jtol)
+        if has_jumps:
+            blk = jnp.where((pjump > 0) & (pb > p[None] + jtol)
+                            & (pb <= pd[None] + jtol), pb, _INF)
+            blk_pb = blk.min(0)
+            target = jnp.where(jnp.isfinite(blk_pb), blk_pb, pd)
+            p = jnp.where(uncon, target, p)
+            fin_jump = uncon & ~jnp.isfinite(blk_pb) & (p >= p_end - ftol)
+        else:
+            p = jnp.where(uncon, pd, p)
+            fin_jump = uncon & (p >= p_end - ftol)
+        finish = jnp.where(fin_jump, t, finish)
+        active = active & ~fin_jump
+        act = act & ~fin_jump
+
+        # ---- burst-resource stall: absorb jumps pinned at p ----------------
+        if has_jumps:
+            pinned = act[None] & (pjump > 0) & (jnp.abs(pb - p[None]) <= ptol)
+            need = _eval_right(As, tL) + pjump
+            te = _first_at_or_above(As, need, tL)
+            te = jnp.where(pinned, te, -_INF)
+            stall_end = te.max(0)
+            # ties keep the first resource (argmax returns the first max)
+            stall_attr = (K + jnp.argmax(te, 0)).astype(jnp.int32)
+            absorbed = absorbed | (pinned[..., None]
+                                   & (jnp.arange(n_rb)[None, None]
+                                      == pbidx[..., None]))
+            stalled = act & (stall_end > -_INF)
+            rec0 = (jnp.where(stalled, t, 0.0), jnp.where(stalled, p, 0.0),
+                    jnp.zeros(B), jnp.where(stalled, stall_attr, -1), stalled)
+            dead = stalled & ~jnp.isfinite(stall_end)
+            active = active & ~dead
+            t = jnp.where(stalled & jnp.isfinite(stall_end), stall_end, t)
+            act = act & ~stalled
+        else:
+            rec0 = None
+
+        # ---- movement: data-limited ceiling following or min-slope ---------
+        on_ceiling = p >= pd - ftol
+        cap_ok = ~jnp.isfinite(smin) | (
+            pdslope <= smin + 1e-12 * jnp.maximum(
+                1.0, jnp.where(jnp.isfinite(smin), smin, 1.0)))
+        data_lim = on_ceiling & cap_ok
+        slope = jnp.where(data_lim, pdslope,
+                          jnp.where(jnp.isfinite(smin), smin, 0.0))
+        attr = jnp.where(data_lim, kstar, K + lstar).astype(jnp.int32)
+
+        events = jnp.stack([tb_ceil, tb_ir])
+        if nC > 1:  # ceiling argmin crossover (impossible with one ceiling)
+            dv = V - pd[None]
+            ds = pdslope[None] - S
+            ux = jnp.where(ds > 1e-300, dv / jnp.where(ds > 1e-300, ds, 1.0),
+                           _INF)
+            ux = jnp.where(ux > TIME_TOL, ux, _INF)
+            events = jnp.concatenate([events, t[None] + ux])
+        if L:
+            upb = jnp.where((slope[None] > 0) & jnp.isfinite(pb),
+                            (pb - p[None]) / jnp.where(slope[None] > 0,
+                                                       slope[None], 1.0),
+                            _INF)
+            upb = jnp.where(upb > TIME_TOL, upb, _INF)
+            events = jnp.concatenate([events, t[None] + upb])
+        ucatch = jnp.where(~data_lim & (p < pd - jtol) & (slope > pdslope + 1e-300),
+                           (pd - p) / jnp.where(slope > pdslope,
+                                                slope - pdslope, 1.0),
+                           _INF)
+        ucatch = jnp.where(ucatch > TIME_TOL, ucatch, _INF)
+        events = jnp.concatenate([events, (t + ucatch)[None]])
+        t_next = events.min(0)
+
+        ufin = jnp.where(slope > 0, (p_end - p) / jnp.where(slope > 0, slope, 1.0),
+                         _INF)
+        t_fin = jnp.where(ufin > 0, t + ufin, t)
+
+        # movement record captures the pre-advance state
+        rec1 = (jnp.where(act, t, 0.0), jnp.where(act, p, 0.0),
+                jnp.where(act, slope, 0.0), jnp.where(act, attr, -1), act)
+
+        done = act & jnp.isfinite(t_fin) & (t_fin <= t_next + TIME_TOL)
+        finish = jnp.where(done, t_fin, finish)
+        active = active & ~done
+        cont = act & ~done
+        stuck = cont & ~jnp.isfinite(t_next)
+        active = active & ~stuck
+        adv = cont & ~stuck
+        t_safe = jnp.where(jnp.isfinite(t_next), t_next, t)
+        pd_left = _eval_left(C, jnp.broadcast_to(t_safe, (nC, B))).min(0)
+        p_new = jnp.minimum(p + slope * (t_safe - t), pd_left)
+        p = jnp.where(adv, jnp.maximum(p, p_new), p)
+        t = jnp.where(adv, t_safe, t)
+
+        # record slots for this iteration, written as one (B, spi) block each
+        def upd(buf, a, b):
+            block = (jnp.stack([a, b], 1) if b is not None
+                     else a[:, None]).astype(buf.dtype)
+            return lax.dynamic_update_slice(
+                buf, block, (jnp.zeros((), it.dtype), spi * it))
+
+        r0 = rec0 or (None,) * 5
+        recT = upd(st["recT"], *((r0[0], rec1[0]) if has_jumps
+                                 else (rec1[0], None)))
+        recC0 = upd(st["recC0"], *((r0[1], rec1[1]) if has_jumps
+                                   else (rec1[1], None)))
+        recC1 = upd(st["recC1"], *((r0[2], rec1[2]) if has_jumps
+                                   else (rec1[2], None)))
+        recA = upd(st["recA"], *((r0[3], rec1[3]) if has_jumps
+                                 else (rec1[3], None)))
+        recM = upd(st["recM"], *((r0[4], rec1[4]) if has_jumps
+                                 else (rec1[4], None)))
+
+        return {"it": it + 1, "t": t, "p": p, "finish": finish,
+                "active": active, "absorbed": absorbed, "recT": recT,
+                "recC0": recC0, "recC1": recC1, "recA": recA, "recM": recM}
+
+    init = {
+        "it": jnp.zeros((), jnp.int32),
+        "t": t0.astype(jnp.float64),
+        "p": jnp.zeros(B),
+        "finish": jnp.full(B, _INF),
+        "active": jnp.ones(B, bool),
+        "absorbed": (jnp.zeros((max(L, 1), B, n_rb), bool) if has_jumps
+                     else jnp.zeros((1, 1, 1), bool)),
+        "recT": jnp.zeros((B, R)),
+        "recC0": jnp.zeros((B, R)),
+        "recC1": jnp.zeros((B, R)),
+        "recA": jnp.full((B, R), -1, jnp.int32),
+        "recM": jnp.zeros((B, R), bool),
+    }
+    st = lax.while_loop(cond, body, init)
+
+    p, t, finish, active = st["p"], st["t"], st["finish"], st["active"]
+    late = active & (p >= p_end - ftol) & ~jnp.isfinite(finish)
+    finish = jnp.where(late, t, finish)
+    overflow = jnp.any(active & (p < p_end - ftol))
+    progress = _assemble_progress(st["recT"], st["recC0"], st["recC1"],
+                                  st["recM"], t0, finish, p_end, B, R)
+    share = _aggregate_shares(st["recT"], st["recA"], st["recM"], finish,
+                              K + L, B, R)
+    return {"finish": finish, "progress": progress, "share": share,
+            "iterations": st["it"], "overflow": overflow}
+
+
+def _assemble_progress(T, C0, C1, M, t0, finish, p_end, B: int, R: int):
+    """engine._assemble_progress with a static piece budget ``P = R + 1``.
+
+    Instead of compacting valid pieces to the front (a stable sort — slow in
+    XLA on CPU), every invalid slot is backward-filled with the NEXT valid
+    piece, producing a sorted-with-duplicates layout: piece-index queries
+    count ``starts <= t`` and therefore land on the LAST duplicate, which is
+    the real piece, so every BPL/kernel query reads identical values.  This
+    also subsumes the numpy twin's zero-width dedupe: a superseded piece
+    becomes a duplicate of its successor.  The terminal hold-at-``p_end``
+    piece is appended as column R; rows that never record and never finish
+    anchor the domain at ``t0``.
+    """
+    M = M & (T < finish[:, None] - TIME_TOL)
+    has_fin = jnp.isfinite(finish)
+    S = jnp.concatenate([T, jnp.where(has_fin, finish, PAD_START)[:, None]], 1)
+    C0x = jnp.concatenate([C0, jnp.where(has_fin, p_end, 0.0)[:, None]], 1)
+    C1x = jnp.concatenate([C1, jnp.zeros((B, 1))], 1)
+    Mx = jnp.concatenate([M, has_fin[:, None]], 1)
+    # "fill each slot from the nearest valid slot at/after it" as a suffix
+    # cumulative-min over masked column indices (no sequential scan)
+    P1 = R + 1
+    idx = jnp.where(Mx, jnp.arange(P1)[None, :], P1)
+    nxt = jnp.flip(lax.cummin(jnp.flip(idx, 1), axis=1), 1)      # (B, P1)
+    grab = lambda a, fill: jnp.take_along_axis(  # noqa: E731
+        jnp.concatenate([a, jnp.full((B, 1), fill)], 1), nxt, 1)
+    Sf = grab(S, PAD_START)
+    C0f = grab(C0x, 0.0)
+    C1f = grab(C1x, 0.0)
+    empty = ~Mx.any(1)
+    Sf = Sf.at[:, 0].set(jnp.where(empty, t0, Sf[:, 0]))
+    return (Sf, C0f, C1f)
+
+
+def _aggregate_shares(T, ATTR, M, finish, n_factors: int, B: int, R: int):
+    """engine._aggregate_shares with the backward column loops replaced by
+    suffix cumulative reductions (record starts are non-decreasing)."""
+    if n_factors == 0:
+        return jnp.zeros((B, 0))
+    sufmin = lambda a: jnp.flip(lax.cummin(jnp.flip(a, 1), axis=1), 1)  # noqa: E731
+    # piece ends: the next valid piece's start (INF when none — clipped by
+    # the effective finish below)
+    idx = jnp.where(M, jnp.arange(R)[None, :], R)
+    nxt = sufmin(jnp.concatenate([idx[:, 1:], jnp.full((B, 1), R)], 1))
+    ends_src = jnp.concatenate([jnp.where(M, T, _INF),
+                                jnp.full((B, 1), _INF)], 1)
+    ends = jnp.where(M, jnp.take_along_axis(ends_src, nxt, 1), 0.0)
+    # effective finish for never-finishing rows: the START of the trailing
+    # equal-attribution run of valid pieces (see the numpy twin)
+    seen = M.any(1)
+    last_idx = jnp.where(M, jnp.arange(R)[None, :], -1).max(1)
+    last_attr = _gather(ATTR, jnp.maximum(last_idx, 0))
+    bad = M & (ATTR != last_attr[:, None])
+    suf_bad = jnp.flip(lax.cummax(jnp.flip(bad, 1).astype(jnp.int8),
+                                  axis=1), 1).astype(bool)
+    in_run = M & ~suf_bad
+    run_start = jnp.where(in_run, T, _INF).min(1)
+    fin_shares = jnp.where(jnp.isfinite(finish), finish,
+                           jnp.where(seen & jnp.isfinite(run_start),
+                                     run_start, 0.0))
+    span = jnp.clip(jnp.minimum(ends, fin_shares[:, None]) - T, 0.0, None)
+    span = jnp.where(M, span, 0.0)
+    onehot = ATTR[:, :, None] == jnp.arange(n_factors, dtype=jnp.int32)[None, None]
+    return (span[:, :, None] * onehot).sum(1)
+
+
+# ---------------------------------------------------------------------------
+# whole-workflow runner + engine front end
+# ---------------------------------------------------------------------------
+
+def _bcast(triple, B: int):
+    s, c0, c1 = triple
+    if s.shape[0] == B:
+        return (s, c0, c1)
+    P = s.shape[1]
+    return tuple(jnp.broadcast_to(a, (B, P)) for a in (s, c0, c1))
+
+
+def _pad_args(args: dict, B: int, Bp: int) -> dict:
+    """Pad every full-batch (B, P) triple to Bp rows by replicating the last
+    scenario (single-row broadcast triples are left alone)."""
+    def pad(tr):
+        if np.asarray(tr[0]).shape[0] != B:
+            return tr  # single-row broadcast: replicated per device later
+        return tuple(np.concatenate([a, np.repeat(a[-1:], Bp - B, 0)], 0)
+                     for a in (np.asarray(x) for x in tr))
+
+    return {proc: {grp: {k: pad(tr) for k, tr in grp_args.items()}
+                   for grp, grp_args in proc_args.items()}
+            for proc, proc_args in args.items()}
+
+
+class JaxSweepEngine:
+    """Compiled lockstep solver for one :class:`CompiledWorkflow`.
+
+    One instance per plan; jitted executables are cached per
+    ``(B, shards, iter_cap)``.  ``solve`` takes the per-process input arrays
+    a :class:`~repro.analysis.pack.ScenarioPack` prepared — numpy
+    ``(rows, P)`` triples with ``rows in (1, B)`` (single-row triples
+    broadcast inside the trace) — and returns the same
+    :class:`~repro.sweep.engine.BatchProcResult` mapping the numpy engine
+    produces.
+    """
+
+    def __init__(self, plan, *, iter_cap: int = DEFAULT_ITER_CAP):
+        self.spec = _WorkflowSpec.from_plan(plan)
+        self.iter_cap = int(iter_cap)
+        self._compiled: dict = {}
+        #: per-(B, shards) iteration budgets proven by past solves, so
+        #: re-sweeps skip the overflow ladder without one deep workload
+        #: ratcheting the budget (and the record-buffer tax) for all shapes
+        self._proven_caps: dict = {}
+
+    # -- trace construction -------------------------------------------------
+    def _make_run(self, B: int, iter_cap: int):
+        spec = self.spec
+
+        def run(args):
+            finish_by, progress_by, out = {}, {}, {}
+            overflow = jnp.zeros((), bool)
+            for ps in spec.procs:
+                t0 = jnp.zeros(B)
+                for g in ps.gate_names:
+                    t0 = jnp.maximum(t0, finish_by[g])
+                a = args[ps.name]
+                ceils = []
+                for dep in ps.data_names:
+                    if dep in ps.edges:
+                        src, out_fn = ps.edges[dep]
+                        inner = _compose(out_fn, progress_by[src], B)
+                        ceils.append(_compose(ps.reqs[dep], inner, B))
+                    elif dep in a.get("ceil", {}):
+                        ceils.append(_bcast(a["ceil"][dep], B))
+                    else:
+                        ceils.append(_compose(ps.reqs[dep],
+                                              _bcast(a["data"][dep], B), B))
+                if not ceils:
+                    ceils = [(t0[:, None], jnp.full((B, 1), ps.p_end),
+                              jnp.zeros((B, 1)))]
+                IR = [_bcast(a["res"][r], B) for r in ps.res_names]
+                res = _solve_proc(ps, ceils, IR, t0, B, iter_cap)
+                finish_by[ps.name] = res["finish"]
+                progress_by[ps.name] = res["progress"]
+                overflow = overflow | res.pop("overflow")
+                out[ps.name] = res
+            out["__overflow__"] = overflow
+            return out
+
+        return run
+
+    def _get_compiled(self, B: int, shards: int, iter_cap: int):
+        key = (B, shards, iter_cap)
+        if key not in self._compiled:
+            if shards > 1:
+                if B % shards:
+                    raise ValueError(
+                        f"sharded solve needs B divisible by shard count "
+                        f"(B={B}, shards={shards}); pad via ScenarioPack.shard")
+                fn = jax.pmap(self._make_run(B // shards, iter_cap))
+            else:
+                fn = jax.jit(self._make_run(B, iter_cap))
+            self._compiled[key] = fn
+        return self._compiled[key]
+
+    # -- host-side argument marshalling ------------------------------------
+    def device_args(self, args_np: dict, B: int, shards: int = 1) -> dict:
+        """Numpy triples -> device pytree (reshaped ``(D, B/D, P)`` when
+        sharded; single-row broadcast triples are replicated per device)."""
+        def put(tr):
+            s, c0, c1 = (np.asarray(a, np.float64) for a in tr)
+            if shards > 1:
+                D = shards
+                if s.shape[0] == 1:
+                    s, c0, c1 = (np.broadcast_to(a, (D, 1, a.shape[1]))
+                                 for a in (s, c0, c1))
+                else:
+                    s, c0, c1 = (a.reshape(D, B // D, a.shape[1])
+                                 for a in (s, c0, c1))
+            return tuple(jnp.asarray(a) for a in (s, c0, c1))
+
+        return {proc: {grp: {k: put(tr) for k, tr in grp_args.items()}
+                       for grp, grp_args in proc_args.items()}
+                for proc, proc_args in args_np.items()}
+
+    # -- the public solve ---------------------------------------------------
+    def solve(self, args, B: int, *, shards: int = 1,
+              cache: dict | None = None,
+              scenario_ids: list[int] | None = None,
+              ) -> dict[str, BatchProcResult]:
+        """Run the compiled sweep; adaptively double the iteration budget on
+        overflow (recompiling) up to ``MAX_ITER_CAP``.
+
+        With ``shards > 1`` the scenario axis is padded up to a multiple of
+        the shard count (padding rows replicate the last scenario, are
+        solved redundantly, and are sliced away) and split across local
+        devices with ``jax.pmap``.
+        """
+        shards = int(shards)
+        if shards > jax.local_device_count():
+            raise ValueError(
+                f"shards={shards} but only {jax.local_device_count()} JAX "
+                "device(s) are visible; on CPU set "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+                "JAX initializes")
+        Bp = -(-B // shards) * shards
+        key = ("dev", Bp, shards)
+        if cache is not None and key in cache:
+            dev = cache[key]
+        else:
+            if callable(args):
+                args = args()
+            if Bp != B:
+                args = _pad_args(args, B, Bp)
+            dev = self.device_args(args, Bp, shards)
+            if cache is not None:
+                cache[key] = dev
+        cap = self._proven_caps.get((Bp, shards), self.iter_cap)
+        while True:
+            fn = self._get_compiled(Bp, shards, cap)
+            out = fn(dev)
+            if not bool(np.asarray(out["__overflow__"]).any()):
+                break
+            cap *= 2
+            if cap > MAX_ITER_CAP:
+                raise UnsupportedScenario(
+                    f"jax engine exceeded {MAX_ITER_CAP} lockstep iterations; "
+                    "use the numpy backend for this workload")
+        self._proven_caps[(Bp, shards)] = cap
+        return self._wrap(out, B, shards, scenario_ids)
+
+    def _wrap(self, out, B: int, shards: int,
+              scenario_ids: list[int] | None = None,
+              ) -> dict[str, BatchProcResult]:
+        def host(x):
+            a = np.asarray(x)
+            if shards > 1:  # (D, Bp/D, ...) -> (Bp, ...) -> drop padding
+                a = a.reshape((-1,) + a.shape[2:])
+            return a[:B]
+
+        results: dict[str, BatchProcResult] = {}
+        for ps in self.spec.procs:
+            r = out[ps.name]
+            finish = host(r["finish"])
+            # gate-never-finishes: same error surface as the numpy engine;
+            # t_start is re-derived from the gate finishes (not shipped back)
+            t0 = np.zeros(B)
+            for g in ps.gate_names:
+                gf = results[g].finish
+                if not np.all(np.isfinite(gf)):
+                    bad = int(np.argmin(np.isfinite(gf)))
+                    if scenario_ids is not None:  # caller's index, not local
+                        bad = scenario_ids[bad]
+                    raise ValueError(f"gate {g!r} of {ps.name!r} never "
+                                     f"finishes (scenario {bad})")
+                t0 = np.maximum(t0, gf)
+            progress = BPL(*(host(a) for a in r["progress"]))
+            K, L = len(ps.data_names), len(ps.res_names)
+            share = host(r["share"])
+            kinds = ["data"] * K + ["resource"] * L
+            names = list(ps.data_names) + list(ps.res_names)
+            if not K:
+                kinds, names = ["data"] + kinds, ["<none>"] + names
+                share = np.concatenate([np.zeros((B, 1)), share], 1)
+            results[ps.name] = BatchProcResult(
+                name=ps.name, p_end=ps.p_end, t_start=t0,
+                finish=finish, progress=progress, ceilings=None,
+                factor_kinds=kinds, factor_names=names, share_seconds=share,
+                iterations=int(np.asarray(r["iterations"]).max()))
+        return results

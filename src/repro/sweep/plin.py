@@ -32,6 +32,13 @@ from repro.kernels.ppoly_eval.ref import PAD_START
 _INF = float("inf")
 
 
+def is_pw_constant(fn: PPoly) -> bool:
+    """True when a scalar ``PPoly`` is piecewise-constant — the resource-rate
+    function class of the batched engines (shared by classification in
+    ``analysis.plan`` and override validation in ``analysis.pack``)."""
+    return fn.coeffs.shape[1] == 1 or bool(np.all(fn.coeffs[:, 1:] == 0.0))
+
+
 class UnsupportedScenario(ValueError):
     """The batched engine's restricted function class is violated.
 
@@ -84,6 +91,17 @@ class BPL:
         return BPL(np.broadcast_to(self.starts, (B, self.P)),
                    np.broadcast_to(self.c0, (B, self.P)),
                    np.broadcast_to(self.c1, (B, self.P)))
+
+    def as_triple(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The raw ``(starts, c0, c1)`` arrays (the jax engine's currency)."""
+        return self.starts, self.c0, self.c1
+
+    def kernel_args(self) -> tuple[np.ndarray, np.ndarray]:
+        """Float32 ``(starts, coeffs)`` for the ``kernels/ppoly_eval`` ops —
+        same layout, so no re-packing beyond the coefficient stack."""
+        from repro.kernels.ppoly_eval.ops import pack_bpl_np
+
+        return pack_bpl_np(self.starts, self.c0, self.c1)
 
     # -- basics ------------------------------------------------------------
     @property

@@ -1,0 +1,157 @@
+"""Jit-compiled lockstep engine vs the numpy reference engine.
+
+Acceptance contract: ``plan.sweep(pack, backend="jax")`` must agree with the
+numpy lockstep engine (itself pinned against the scalar solver) to float
+tolerance on makespans, per-process finish times, progress curves, AND
+bottleneck attribution (``share_seconds``) — including burst-stall,
+starvation, and gated-chain edge cases, and with the scenario axis sharded
+across devices.
+
+Compiles are slow on CPU, so the suite reuses one module-scoped plan/pack
+where it can and keeps per-workflow batches small.
+"""
+
+import numpy as np
+import pytest
+
+from repro import sweep
+from repro.configs.paper_workflow import build_workflow, sweep_scenarios
+from repro.core import DataDep, PPoly, Process, ResourceDep, Workflow
+
+from test_sweep import _assert_match, _random_scenarios, _random_workflow, _single
+
+B_GOLD = 9
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return build_workflow(0.5).compile()
+
+
+@pytest.fixture(scope="module")
+def gold(plan):
+    scs = sweep_scenarios(np.linspace(0.1, 0.9, B_GOLD))
+    pack = plan.prepare(scs)
+    rj = plan.sweep(pack, backend="jax")
+    rn = plan.sweep(scs, backend="numpy")
+    return scs, pack, rj, rn
+
+
+def _jax_vs_numpy(wf, scenarios):
+    plan = wf.compile()
+    rj = plan.sweep(plan.prepare(scenarios), backend="jax")
+    rn = plan.sweep(scenarios, backend="numpy")
+    assert set(rj.backends) == {"jax"}
+    _assert_match(rj, rn)
+    return rj, rn
+
+
+# ------------------------------------------------------- golden workflow ----
+def test_paper_workflow_agrees(gold):
+    _scs, _pack, rj, rn = gold
+    assert rj.backends == ["jax"] * B_GOLD and rj.backend == "jax"
+    _assert_match(rj, rn)
+
+
+def test_progress_curves_agree(gold):
+    scs, _pack, rj, rn = gold
+    ts = np.linspace(0.0, 400.0, 64)
+    for pn in rj.order:
+        a = rj.sample_progress(pn, ts, use_pallas=False)
+        b = rn.sample_progress(pn, ts, use_pallas=False)
+        scale = np.maximum(1.0, np.abs(b))
+        assert np.max(np.abs(a - b) / scale) < 2e-4
+
+
+def test_data_ceiling_lazy_derivation(gold):
+    """Jax reports re-derive ceilings lazily; values must match numpy's."""
+    _scs, _pack, rj, rn = gold
+    ts = np.linspace(0.0, 300.0, 32)
+    va, aa = rj.data_ceiling("task3", ts, use_pallas=False)
+    vb, ab = rn.data_ceiling("task3", ts, use_pallas=False)
+    np.testing.assert_allclose(va, vb, rtol=1e-5)
+    np.testing.assert_array_equal(aa, ab)
+
+
+def test_kernel_finish_times_agree(gold):
+    _scs, _pack, rj, rn = gold
+    for pn in rj.order:
+        got = rj.kernel_finish_times(pn, use_pallas=False)
+        np.testing.assert_allclose(got, rj.finish[pn], rtol=5e-5)
+
+
+def test_pack_resweep_deterministic(plan, gold):
+    _scs, pack, rj, _rn = gold
+    again = plan.sweep(pack, backend="jax")
+    np.testing.assert_array_equal(rj.makespans, again.makespans)
+    np.testing.assert_array_equal(rj.share_seconds, again.share_seconds)
+
+
+# ----------------------------------------------------------- edge cases ----
+def test_starvation_window():
+    rj, _ = _jax_vs_numpy(_single(PPoly.step([0, 10, 20], [10.0, 0.0, 10.0])),
+                          [sweep.Scenario()])
+    assert rj.finish["dl"][0] == pytest.approx(110.0)
+
+
+def test_permanent_starvation_never_finishes():
+    rj, rn = _jax_vs_numpy(_single(PPoly.step([0, 10], [10.0, 0.0])),
+                           [sweep.Scenario()])
+    assert not np.isfinite(rj.finish["dl"][0])
+
+
+def test_burst_resource_stall_absorption():
+    n = 1000.0
+    pr = Process("burst", data={"d": DataDep.stream(n, n)},
+                 resources={"cpu": ResourceDep.stream(20.0, n),
+                            "mem": ResourceDep.burst_at(500.0, 30.0, n)},
+                 total_progress=n).identity_output()
+    wf = Workflow()
+    wf.add(pr, resources={"cpu": PPoly.constant(1.0),
+                          "mem": PPoly.constant(2.0)})
+    wf.set_data_input("burst", "d", PPoly.linear(0.0, 50.0))
+    scs = [sweep.Scenario(label=f"m{m}",
+                          resource_inputs={("burst", "mem"): PPoly.constant(m)})
+           for m in (0.5, 1.0, 2.0, 1000.0)]
+    _jax_vs_numpy(wf, scs)
+
+
+@pytest.mark.parametrize("seed", [1, 4])
+def test_randomized_scenarios_match_numpy(seed):
+    rng = np.random.default_rng(seed)
+    wf = _random_workflow(rng)
+    scs = _random_scenarios(rng, wf, 6)
+    _jax_vs_numpy(wf, scs)
+
+
+def test_adaptive_iter_cap_growth():
+    """A tiny initial budget must transparently double until it fits."""
+    from repro.sweep.jax_engine import JaxSweepEngine
+
+    wf = _single(PPoly.step([0, 5, 10, 15, 20, 25], [10.0, 0.0, 10.0, 0.0,
+                                                     10.0, 20.0]))
+    plan = wf.compile()
+    plan._jax_engine = JaxSweepEngine(plan, iter_cap=1)
+    pack = plan.prepare([sweep.Scenario()])
+    rj = plan.sweep(pack, backend="jax")
+    rn = plan.sweep([sweep.Scenario()], backend="numpy")
+    _assert_match(rj, rn)
+    # the proven budget is persisted per shape (re-sweeps skip the ladder)
+    # without ratcheting the default for other shapes
+    assert plan._jax_engine._proven_caps[(1, 1)] > 1
+    assert plan._jax_engine.iter_cap == 1
+    _assert_match(plan.sweep(pack, backend="jax"), rn)
+
+
+def test_explicit_jax_backend_raises_out_of_class():
+    wf = _single(PPoly.pwlinear([0.0, 50.0], [5.0, 20.0]))  # not pw-const
+    with pytest.raises(sweep.UnsupportedScenario):
+        wf.compile().sweep([sweep.Scenario()], backend="jax")
+
+
+def test_x64_enabled_by_engine_import():
+    import jax
+
+    import repro.sweep.jax_engine  # noqa: F401
+
+    assert jax.config.jax_enable_x64
