@@ -186,6 +186,34 @@ def bench_compile_once_resweep():
     return ("compile_once_resweep", us_pack_main, " ".join(parts))
 
 
+def bench_quadratic_resweep():
+    """Quadratic-class acceptance row: prepared-pack re-sweeps where EVERY
+    scenario carries a piecewise-linear (ramped) resource override — the
+    degree-2 path (quadratic progress pieces, widened jax trace) must stay
+    on the fused engines with zero scalar fallbacks."""
+    import warnings
+
+    from repro.analysis import ramp_resource
+    from repro.configs.paper_workflow import build_workflow
+
+    B = 24 if QUICK else 200
+    plan = build_workflow(0.5).compile()
+    scs = [ramp_resource("dl1", "link", [0.0, 120.0], [2e6 * f, 0.6e6],
+                         label=f"ramp{f:.2f}")
+           for f in np.linspace(0.3, 2.0, B)]
+    pack = plan.prepare(scs)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any fallback warning fails the row
+        res = plan.sweep(pack)              # warm (jit compile)
+        assert res.fallback_indices == [], "quadratic sweep fell back"
+        us_jax = _time(lambda: plan.sweep(pack), n=10)
+        us_np = _time(lambda: plan.sweep(pack, backend="numpy"), n=5)
+    return ("quadratic_ramp_resweep", us_jax,
+            f"B={B} all-ramp overrides: jax={us_jax / 1e3:.2f}ms "
+            f"numpy={us_np / 1e3:.1f}ms fallbacks=0 "
+            f"(pw-linear resource class, quadratic progress pieces)")
+
+
 def bench_fig8_structure():
     from repro.configs.paper_workflow import build_workflow
     from repro.core import bottleneck_report
@@ -298,6 +326,7 @@ BENCHES = [
     bench_fig7_sweep,
     bench_sweep_batched_vs_loop,
     bench_compile_once_resweep,
+    bench_quadratic_resweep,
     bench_fig8_structure,
     bench_perf_vs_des,
     bench_stepmodel,
@@ -314,6 +343,14 @@ BENCH_JSON = ROOT / "BENCH_sweep.json"
 #: --quick writes here instead, so CI smoke runs (and devs trying --quick)
 #: never clobber the tracked full-run trajectory above
 BENCH_QUICK_JSON = ROOT / "BENCH_quick.json"
+
+
+def _host() -> str:
+    """Provenance tag for recorded baselines (timings are machine-relative)."""
+    import os
+    import platform
+
+    return f"{platform.node()}/{os.cpu_count()}cpu"
 
 
 def compare_rows(old_rows: list[dict], new_rows: list[dict],
@@ -337,6 +374,12 @@ def compare_rows(old_rows: list[dict], new_rows: list[dict],
         if orow is None:
             new_col = f"{nus:12.1f}" if nus else f"{'-':>12}"
             lines.append(f"{name:<34}{'-':>12}{new_col}{'-':>9}  new row")
+            continue
+        if not ous and not nus:
+            # informational row on BOTH sides (e.g. roofline_cells' explicit
+            # skip row): expected steady state, exit-0 — not a data gap
+            lines.append(f"{name:<34}{'-':>12}{'-':>12}{'-':>9}  "
+                         "informational (untimed on both sides)")
             continue
         if not ous or not nus:  # None or 0.0: nothing comparable
             lines.append(f"{name:<34}{'-':>12}{'-':>12}{'-':>9}  skipped "
@@ -403,7 +446,7 @@ def main(argv: list[str] | None = None) -> None:
     # partial (filtered) runs must not clobber the tracked trajectory, and
     # --quick rows (small B) go to their own file for the same reason
     if not args.filters:
-        payload = {"schema": 1, "rows": rows}
+        payload = {"schema": 1, "rows": rows, "host": _host()}
         if QUICK:
             payload["quick"] = True
         target = BENCH_QUICK_JSON if QUICK else BENCH_JSON
@@ -415,6 +458,15 @@ def main(argv: list[str] | None = None) -> None:
         print(f"# --compare vs {args.compare}")
         for ln in lines:
             print("# " + ln)
+        old_host = old_payload.get("host")
+        if old_host and old_host != _host():
+            # the gate still applies (min-of-n absorbs scheduler noise, not
+            # hardware deltas) — make a cross-machine failure self-explaining
+            print(f"# NOTE: baseline recorded on {old_host!r}, this run on "
+                  f"{_host()!r}; absolute timings are "
+                  "machine-relative — if rows regress with no plausible code "
+                  "cause, refresh the baseline from this run's uploaded "
+                  "artifact")
         if old_quick != QUICK:
             # quick rows use smaller B — timings are not comparable, so
             # report but never gate across quick/full runs

@@ -18,13 +18,14 @@ see :mod:`repro.analysis.scenarios` for the scenario-builder DSL and
 from .bottleneck import BottleneckFn, BottleneckInterval, derive_bottleneck_fn
 from .pack import ScenarioPack
 from .report import BottleneckRow, FinishTimes, Report, report_from_scalar
-from .scenarios import ScenarioSpec, grid, override, scale_resource, speed_up_data
+from .scenarios import (ScenarioSpec, grid, override, ramp_resource,
+                        scale_resource, speed_up_data)
 from . import scenarios
 from .plan import CompiledWorkflow, compile_workflow
 
 __all__ = [
     "BottleneckFn", "BottleneckInterval", "BottleneckRow", "CompiledWorkflow",
     "FinishTimes", "Report", "ScenarioPack", "ScenarioSpec", "compile_workflow",
-    "derive_bottleneck_fn", "grid", "override", "report_from_scalar",
-    "scale_resource", "scenarios", "speed_up_data",
+    "derive_bottleneck_fn", "grid", "override", "ramp_resource",
+    "report_from_scalar", "scale_resource", "scenarios", "speed_up_data",
 ]

@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.core.ppoly import PPoly
 from repro.sweep.batch import Scenario, ScenarioBatch
-from repro.sweep.plin import BPL, UnsupportedScenario, is_pw_constant
+from repro.sweep.plin import BPL, UnsupportedScenario, is_batchable_resource
 
 __all__ = ["ScenarioPack"]
 
@@ -62,9 +62,14 @@ class ScenarioPack:
     reason: str | None
     proc_args: dict[str, dict[str, dict[str, BPL]]] = field(repr=False)
     shards: int = 1
+    #: static degree signature of the packed batch: True when any resource
+    #: input ramps (non-zero slope) or any packed function carries a
+    #: quadratic plane — selects the jax engine's widened quadratic trace
+    ramps: bool = False
     #: per-(B, shards) device-array memo used by the jax engine so repeated
     #: re-sweeps of one pack skip even the host->device transfer
-    _cache: dict = field(default_factory=dict, repr=False, compare=False)
+    _cache: dict[Any, Any] = field(default_factory=dict, repr=False,
+                                   compare=False)
 
     # ------------------------------------------------------------------
     @property
@@ -77,8 +82,8 @@ class ScenarioPack:
 
     # ------------------------------------------------------------------
     @staticmethod
-    def build(plan, scenario_list: Sequence, *, classify: bool = True,
-              ) -> "ScenarioPack":
+    def build(plan: Any, scenario_list: Sequence[Any], *,
+              classify: bool = True) -> "ScenarioPack":
         """Resolve, classify, and pack ``scenario_list`` against ``plan``."""
         batch = ScenarioBatch(plan.workflow, list(scenario_list))
         scenarios = [_copy_scenario(sc) for sc in batch.scenarios]
@@ -103,7 +108,7 @@ class ScenarioPack:
                 reason = reason or str(e)
         return ScenarioPack(plan=plan, labels=labels, scenarios=scenarios,
                             bat_idx=bat_idx, loop_idx=loop_idx, reason=reason,
-                            proc_args=proc_args)
+                            proc_args=proc_args, ramps=_compute_ramps(proc_args))
 
     # ------------------------------------------------------------------
     def shard(self, n: int | None = None) -> "ScenarioPack":
@@ -125,7 +130,8 @@ class ScenarioPack:
         return ScenarioPack(plan=self.plan, labels=self.labels,
                             scenarios=self.scenarios, bat_idx=self.bat_idx,
                             loop_idx=self.loop_idx, reason=self.reason,
-                            proc_args=self.proc_args, shards=n)
+                            proc_args=self.proc_args, shards=n,
+                            ramps=self.ramps)
 
     # ------------------------------------------------------------------
     def override(self, inputs: Mapping[Any, Any]) -> "ScenarioPack":
@@ -165,13 +171,14 @@ class ScenarioPack:
             for i, sc in enumerate(scenarios):
                 (sc.resource_inputs if is_res else sc.data_inputs)[key] = fns[i]
             for fn in fns:
-                bad = (not is_pw_constant(fn)) if is_res \
-                    else (not fn.is_piecewise_linear)
+                bad = (not is_batchable_resource(fn)) if is_res \
+                    else (not fn.is_piecewise_quadratic)
                 if bad:
                     raise UnsupportedScenario(
                         f"override for {proc}.{name} leaves the batched "
-                        "function class; use plan.prepare() on the new "
-                        "scenario list instead")
+                        "function class (resources: non-negative "
+                        "piecewise-linear rates; data: degree <= 2); use "
+                        "plan.prepare() on the new scenario list instead")
             if self.bat_idx:
                 packed = BPL.from_ppolys([fns[i] for i in self.bat_idx])
                 grp = proc_args.setdefault(proc, {"res": {}, "data": {}, "ceil": {}})
@@ -183,7 +190,21 @@ class ScenarioPack:
         return ScenarioPack(plan=plan, labels=self.labels, scenarios=scenarios,
                             bat_idx=self.bat_idx, loop_idx=self.loop_idx,
                             reason=self.reason, proc_args=proc_args,
-                            shards=self.shards)
+                            shards=self.shards,
+                            ramps=_compute_ramps(proc_args))
+
+
+def _compute_ramps(proc_args: dict[str, dict[str, dict[str, BPL]]]) -> bool:
+    """True when the packed batch needs the jax engine's quadratic trace."""
+    for args in proc_args.values():
+        for bpl in args.get("res", {}).values():
+            if bpl.max_degree() >= 1:
+                return True
+        for grp in ("data", "ceil"):
+            for bpl in args.get(grp, {}).values():
+                if bpl.max_degree() >= 2:
+                    return True
+    return False
 
 
 def _resolve_override_fns(value, base: PPoly, B: int, is_res: bool,
@@ -203,7 +224,8 @@ def _resolve_override_fns(value, base: PPoly, B: int, is_res: bool,
     return fns
 
 
-def _pack_proc_args(plan, bats: list[Scenario]) -> dict:
+def _pack_proc_args(plan: Any, bats: list[Scenario],
+                    ) -> dict[str, dict[str, dict[str, BPL]]]:
     """The per-call packing previously done inside the sweep, hoisted out.
 
     Must mirror the numpy runner's expectations exactly — the bit-identity

@@ -41,7 +41,7 @@ from repro.core.workflow import Workflow
 from repro.sweep.batch import Scenario
 from repro.sweep.engine import BatchProcResult, _res_tables, solve_batch
 from repro.sweep.plin import (BPL, UnsupportedScenario, compose_scalar,
-                              is_pw_constant)
+                              is_batchable_resource)
 
 from .bottleneck import BottleneckFn, derive_bottleneck_fn
 from .pack import ScenarioPack
@@ -54,9 +54,6 @@ __all__ = ["CompiledWorkflow", "compile_workflow"]
 SWEEP_BACKENDS = ("auto", "jax", "numpy", "batched", "loop")
 
 _FactorKey = tuple[str, str, str]
-
-
-_pw_constant = is_pw_constant
 
 
 def compile_workflow(workflow: Workflow) -> "CompiledWorkflow":
@@ -100,10 +97,10 @@ class CompiledWorkflow:
         self._class_reason: str | None = self._audit_function_class()
 
         # ---- Pallas-ready packing of base inputs (single row, broadcast) ---
-        self._base_res_const: dict[tuple[str, str], bool] = {
-            k: _pw_constant(fn) for k, fn in self.base_res.items()}
-        self._base_data_linear: dict[tuple[str, str], bool] = {
-            k: fn.is_piecewise_linear for k, fn in self.base_data.items()}
+        self._base_res_ok: dict[tuple[str, str], bool] = {
+            k: is_batchable_resource(fn) for k, fn in self.base_res.items()}
+        self._base_data_ok: dict[tuple[str, str], bool] = {
+            k: fn.is_piecewise_quadratic for k, fn in self.base_data.items()}
         self._base_res_row: dict[tuple[str, str], BPL] = {}
         self._base_ceil_row: dict[tuple[str, str], BPL] = {}
         for key, fn in self.base_res.items():
@@ -111,7 +108,7 @@ class CompiledWorkflow:
                 self._base_res_row[key] = BPL.from_ppolys([fn])
         for (n, d), fn in self.base_data.items():
             req = wf.processes[n].data[d].requirement
-            if fn.is_piecewise_linear and req.is_piecewise_linear:
+            if fn.is_piecewise_quadratic and req.is_piecewise_linear:
                 self._base_ceil_row[(n, d)] = compose_scalar(
                     req, BPL.from_ppolys([fn]))
 
@@ -389,25 +386,35 @@ class CompiledWorkflow:
         return self._merge(pack, bat_idx, batched, loop_runs, engine_used)
 
     def _classify(self, sc: Scenario) -> str | None:
-        """None when the scenario fits the lockstep engine, else the reason."""
+        """None when the scenario fits the lockstep engine, else the reason.
+
+        The batched class is piecewise-quadratic end to end: resource rate
+        inputs may be any non-negative piecewise-LINEAR function (linear
+        rate × linear requirement → quadratic progress, solved in closed
+        form), data inputs any function of degree <= 2.  Only degree >= 2
+        resource rates, negative rates, or degree >= 3 data inputs still
+        fall back to the scalar loop.
+        """
         if self._class_reason is not None:
             return self._class_reason
         for key, fn in sc.resource_inputs.items():
-            if not _pw_constant(fn):
-                return (f"resource input {key[0]}.{key[1]} must be "
-                        "piecewise-constant for the batched engine")
-        for key, ok in self._base_res_const.items():
+            if not is_batchable_resource(fn):
+                return (f"resource input {key[0]}.{key[1]} must be a "
+                        "non-negative piecewise-linear rate for the "
+                        "batched engine")
+        for key, ok in self._base_res_ok.items():
             if not ok and key not in sc.resource_inputs:
-                return (f"base resource input {key[0]}.{key[1]} must be "
-                        "piecewise-constant for the batched engine")
+                return (f"base resource input {key[0]}.{key[1]} must be a "
+                        "non-negative piecewise-linear rate for the "
+                        "batched engine")
         for key, fn in sc.data_inputs.items():
-            if not fn.is_piecewise_linear:
-                return (f"data input {key[0]}.{key[1]} must be "
-                        "piecewise-linear for the batched engine")
-        for key, ok in self._base_data_linear.items():
+            if not fn.is_piecewise_quadratic:
+                return (f"data input {key[0]}.{key[1]} must have degree <= 2 "
+                        "for the batched engine")
+        for key, ok in self._base_data_ok.items():
             if not ok and key not in sc.data_inputs:
-                return (f"base data input {key[0]}.{key[1]} must be "
-                        "piecewise-linear for the batched engine")
+                return (f"base data input {key[0]}.{key[1]} must have degree "
+                        "<= 2 for the batched engine")
         return None
 
     def _audit_function_class(self) -> str | None:
@@ -470,12 +477,13 @@ class CompiledWorkflow:
         if self._jax_engine is None:
             self._jax_engine = JaxSweepEngine(self)
         args = lambda: {  # noqa: E731 — built only on device-cache miss
-            name: {grp: {k: bpl.as_triple() for k, bpl in grp_args.items()}
+            name: {grp: {k: bpl.arrays() for k, bpl in grp_args.items()}
                    for grp, grp_args in proc_args.items()}
             for name, proc_args in pack.proc_args.items()}
         results = self._jax_engine.solve(args, pack.B_batched,
                                          shards=pack.shards, cache=pack._cache,
-                                         scenario_ids=pack.bat_idx)
+                                         scenario_ids=pack.bat_idx,
+                                         ramps=pack.ramps)
         # the compiled run keeps its ceiling arrays on device; re-derive them
         # host-side only if a curve query (Report.data_ceiling) asks.  The
         # thunk captures just the packed inputs, not the pack (whose device

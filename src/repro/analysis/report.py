@@ -242,11 +242,12 @@ class Report:
         packs = [_pack_f32(c) for c in r.ceilings]
         P = max(s.shape[1] for s, _ in packs)
         F = len(packs)
+        K = max(c.shape[-1] for _, c in packs)  # 3 for quadratic ceilings
         starts = np.full((self.B, F, P), PAD_START, np.float32)
-        coeffs = np.zeros((self.B, F, P, 2), np.float32)
+        coeffs = np.zeros((self.B, F, P, K), np.float32)
         for f, (s, c) in enumerate(packs):
             starts[:, f, :s.shape[1]] = s
-            coeffs[:, f, :s.shape[1]] = c
+            coeffs[:, f, :s.shape[1], :c.shape[-1]] = c
         q = np.broadcast_to(np.asarray(ts, np.float32), (self.B, len(ts)))
         vals, arg = ppoly_min_eval(starts, coeffs, q, **kw)
         return np.asarray(vals), np.asarray(arg)

@@ -28,8 +28,8 @@ from repro.core.ppoly import PPoly
 from repro.core.workflow import Workflow
 from repro.sweep.batch import Scenario
 
-__all__ = ["ScenarioSpec", "grid", "override", "parse_key", "scale_resource",
-           "speed_up_data"]
+__all__ = ["ScenarioSpec", "grid", "override", "parse_key", "ramp_resource",
+           "scale_resource", "speed_up_data"]
 
 #: a replacement input function, or a number meaning "scale the base"
 OverrideValue = Union[PPoly, float, int]
@@ -146,6 +146,32 @@ def scale_resource(proc: str, res: str, factors: Iterable[float],
     return [ScenarioSpec(label=label_fmt.format(proc=proc, res=res, factor=f),
                          resources={(proc, res): float(f)})
             for f in factors]
+
+
+def ramp_resource(proc: str, res: str, times: Sequence[float],
+                  rates: Sequence[float], label: str = "") -> ScenarioSpec:
+    """One scenario replacing a resource allocation with the continuous
+    piecewise-linear interpolation through ``(times, rates)`` — the shape of
+    monitoring-derived rate series (cf. low-level I/O monitoring feeds).
+
+    Piecewise-linear resource inputs are INSIDE the batched function class
+    (linear rate × linear requirement → quadratic progress pieces, solved in
+    closed form), so ramp scenarios sweep on the jax/numpy fast paths with
+    zero scalar fallbacks.  Rates must be non-negative — a negative rate
+    leaves the model class and would fall back to the scalar loop.
+
+    >>> scenarios.ramp_resource("dl1", "link", [0.0, 60.0], [2e6, 0.5e6])
+    """
+    rates = [float(r) for r in rates]
+    if len(times) != len(rates):
+        raise ValueError(f"ramp_resource needs one rate per time "
+                         f"({len(times)} times, {len(rates)} rates)")
+    if any(r < 0.0 for r in rates):
+        raise ValueError("ramp_resource rates must be non-negative "
+                         f"(got {min(rates)})")
+    fn = PPoly.pwlinear(list(times), rates)
+    return ScenarioSpec(label=label or f"{proc}.{res}~ramp",
+                        resources={(proc, res): fn})
 
 
 def grid(axes: Mapping[OverrideKey, Sequence[OverrideValue]],

@@ -29,7 +29,8 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["PPoly", "poly_eval", "poly_shift", "poly_compose", "poly_real_roots"]
+__all__ = ["PPoly", "poly_eval", "poly_shift", "poly_compose", "poly_real_roots",
+           "first_pos_root"]
 
 #: absolute tolerance used when comparing breakpoints / roots (time axis)
 TIME_TOL = 1e-9
@@ -138,6 +139,35 @@ def poly_real_roots(c: np.ndarray, lo: float, hi: float, *, tol: float = TIME_TO
     return ded
 
 
+def first_pos_root(a, b, c, tol: float = TIME_TOL):
+    """Elementwise smallest root ``> tol`` of ``a·u² + b·u + c`` (inf if none).
+
+    The quadratic-formula primitive of the batched engines: every event of
+    the piecewise-quadratic lockstep solver ("when does motion cover Δ",
+    "when do two ceilings cross", "when does a cap undercut the ceiling
+    slope") is the first positive root of one quadratic per scenario.  Uses
+    the numerically-stable ``q``-branch (``q = -(b + sign(b)·√disc)/2``,
+    roots ``q/a`` and ``c/q``) so near-degenerate discriminants and tiny
+    leading coefficients do not cancel catastrophically; ``a == 0`` rows
+    fall back to the linear root exactly.  Mirrored op-for-op by the jax
+    engine (:mod:`repro.sweep.jax_engine`).
+    """
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    c = np.asarray(c, np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        lin = np.where(b != 0.0, -c / np.where(b != 0.0, b, 1.0), _INF)
+        disc = b * b - 4.0 * a * c
+        sq = np.sqrt(np.maximum(disc, 0.0))
+        q = -0.5 * (b + np.where(b >= 0.0, sq, -sq))
+        r1 = np.where(a != 0.0, q / np.where(a != 0.0, a, 1.0), _INF)
+        r2 = np.where(q != 0.0, c / np.where(q != 0.0, q, 1.0), _INF)
+    quad = np.minimum(np.where(r1 > tol, r1, _INF),
+                      np.where(r2 > tol, r2, _INF))
+    quad = np.where(disc >= 0.0, quad, _INF)
+    return np.where(a == 0.0, np.where(lin > tol, lin, _INF), quad)
+
+
 # --------------------------------------------------------------------------
 # PPoly
 # --------------------------------------------------------------------------
@@ -213,9 +243,16 @@ class PPoly:
 
     @property
     def is_piecewise_linear(self) -> bool:
-        """True when every piece has degree <= 1 (the class the batched
-        sweep engine and the first-crossing kernel operate on)."""
+        """True when every piece has degree <= 1 (the class of the batched
+        engines' data inputs / requirements / outputs)."""
         return self.coeffs.shape[1] <= 2
+
+    @property
+    def is_piecewise_quadratic(self) -> bool:
+        """True when every piece has degree <= 2 — the full function class of
+        the batched sweep engines and the degree-2 ``kernels/ppoly_eval``
+        queries (linear resource × linear requirement → quadratic progress)."""
+        return self.coeffs.shape[1] <= 3
 
     def linear_parts(self):
         """``(starts, values, slopes)`` arrays of a piecewise-linear function

@@ -259,12 +259,26 @@ def solve(
             continue
 
         s_now = float(smin(t))
-        pd_deriv_now = float(poly_eval(_poly_deriv(poly_shift(pd.coeffs[pd_i], t - pd.starts[pd_i])), 0.0))
+        cpd_local = poly_shift(pd.coeffs[pd_i], t - pd.starts[pd_i])
+        dpd_local = _poly_deriv(cpd_local)
+        pd_deriv_now = float(poly_eval(dpd_local, 0.0))
         on_ceiling = p >= pd_right - 1e-9 * max(1.0, p_end)
 
-        if on_ceiling and pd_deriv_now <= s_now + 1e-12 * max(1.0, s_now):
+        data_lim = on_ceiling and pd_deriv_now <= s_now + 1e-12 * max(1.0, s_now)
+        if data_lim and abs(pd_deriv_now - s_now) <= 1e-9 * max(1.0, abs(s_now)):
+            # tangency tie-break (possible only with non-constant rate caps
+            # or curved ceilings): at cap == ceiling-slope the instantaneous
+            # comparison is blind — the rate that is LOWER just after t
+            # governs, so compare the derivatives of the two rates
+            i_s = smin.piece_index(t)
+            s_rate = float(poly_eval(_poly_deriv(poly_shift(
+                smin.coeffs[i_s], t - smin.starts[i_s])), 0.0))
+            pdd_now = float(poly_eval(_poly_deriv(dpd_local), 0.0))
+            if s_rate < pdd_now - 1e-12 * max(1.0, abs(pdd_now)):
+                data_lim = False
+
+        if data_lim:
             # ================= data-limited: follow P_D ======================
-            cpd_local = poly_shift(pd.coeffs[pd_i], t - pd.starts[pd_i])
             events = [pd_piece_end, window_end]
             # resource becomes binding: first root of (smin - pd') in (t, ..)
             dpd = _poly_deriv(cpd_local)

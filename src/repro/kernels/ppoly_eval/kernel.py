@@ -99,23 +99,28 @@ def ppoly_min_eval_pallas(starts: jnp.ndarray, coeffs: jnp.ndarray, q: jnp.ndarr
     )(starts, coeffs, q)
 
 
-def _first_crossing_kernel(starts_ref, c0_ref, c1_ref, plen_ref, y_ref, out_ref):
-    """First t with f(t) >= y for monotone piecewise-linear f (closed form)."""
+def _first_crossing_kernel(starts_ref, c0_ref, c1_ref, c2_ref, plen_ref,
+                           y_ref, out_ref):
+    """First t with f(t) >= y for monotone piecewise f, degree <= 2.
+
+    Same VPU shape as the eval kernel: the whole piece table sits in VMEM
+    and every (query × piece) candidate is computed lane-parallel — the
+    quadratic branch adds a handful of element-wise FLOPs (the stable
+    q-branch roots), no gathers, no data-dependent control flow.
+    """
+    from .ref import first_crossing_candidates
+
     starts = starts_ref[...]            # (bB, P)
     c0 = c0_ref[...]                    # (bB, P)
     c1 = c1_ref[...]                    # (bB, P)
+    c2 = c2_ref[...]                    # (bB, P)
     plen = plen_ref[...]                # (bB, P)
     y = y_ref[...]                      # (bB, bT)
     s_ = starts[:, None, :]             # (bB, 1, P)
-    c0_ = c0[:, None, :]
-    c1_ = c1[:, None, :]
-    plen_ = plen[:, None, :]
     y_ = y[:, :, None]                  # (bB, bT, 1)
     tol = 1e-6 * jnp.maximum(1.0, jnp.abs(y_))
-    cand = jnp.where(c0_ >= y_ - tol, s_, _BIG)
-    u = (y_ - c0_) / jnp.where(c1_ > 0, c1_, 1.0)
-    ok = (c1_ > 0) & (c0_ < y_ - tol) & (u <= plen_)
-    cand = jnp.minimum(cand, jnp.where(ok, s_ + u, _BIG))
+    cand = first_crossing_candidates(s_, c0[:, None, :], c1[:, None, :],
+                                     c2[:, None, :], plen[:, None, :], y_, tol)
     cand = jnp.where(s_ < _PAD_HALF, cand, _BIG)
     out_ref[...] = jnp.min(cand, axis=-1)
 
@@ -125,14 +130,15 @@ def ppoly_first_crossing_pallas(starts: jnp.ndarray, coeffs: jnp.ndarray,
                                 block_t: int = 128, interpret: bool = True):
     """``pallas_call`` wrapper for batched first-crossing queries.
 
-    starts (B, P) · coeffs (B, P, 2) · y (B, T) → (B, T) crossing times.
+    starts (B, P) · coeffs (B, P, K<=3) · y (B, T) → (B, T) crossing times.
     """
     B, P = starts.shape
     T = y.shape[-1]
-    assert coeffs.shape[-1] <= 2, "first crossing requires piecewise-linear input"
+    assert coeffs.shape[-1] <= 3, "first crossing requires degree <= 2 input"
     assert B % block_b == 0 and T % block_t == 0, "pad inputs to block multiples"
     c0 = coeffs[..., 0]
     c1 = coeffs[..., 1] if coeffs.shape[-1] > 1 else jnp.zeros_like(c0)
+    c2 = coeffs[..., 2] if coeffs.shape[-1] > 2 else jnp.zeros_like(c0)
     plen = jnp.concatenate([starts[:, 1:],
                             jnp.full((B, 1), PAD_START, starts.dtype)],
                            axis=1) - starts
@@ -145,12 +151,13 @@ def ppoly_first_crossing_pallas(starts: jnp.ndarray, coeffs: jnp.ndarray,
             pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
             pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
             pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, P), lambda i, j: (i, 0)),
             pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
         ],
         out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
         interpret=interpret,
-    )(starts, c0, c1, plen, y)
+    )(starts, c0, c1, c2, plen, y)
 
 
 def ppoly_eval_pallas(starts: jnp.ndarray, coeffs: jnp.ndarray, q: jnp.ndarray,

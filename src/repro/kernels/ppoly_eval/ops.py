@@ -128,17 +128,19 @@ def _dispatch_crossing(starts, coeffs, y, use_pallas: bool, interpret: bool,
 def ppoly_first_crossing(starts, coeffs, y, *, use_pallas: bool | None = None,
                          interpret: bool | None = None, block_b: int = 8,
                          block_t: int = 128):
-    """First ``t`` with ``f(t) >= y`` for monotone piecewise-linear batches.
+    """First ``t`` with ``f(t) >= y`` for monotone batches of degree <= 2.
 
-    ``starts (B,P)``, ``coeffs (B,P,K<=2)``, ``y (B,T)`` → (B,T) float32 (a
-    value ``>= 1e30`` means the level is never reached).  With ``y = p_end``
-    this extracts finish times from a whole sweep's progress functions in one
+    ``starts (B,P)``, ``coeffs (B,P,K<=3)``, ``y (B,T)`` → (B,T) float32 (a
+    value ``>= 1e30`` means the level is never reached).  Quadratic pieces
+    (the progress class under ramped resource allocations) are solved by the
+    quadratic formula's numerically-stable branch; with ``y = p_end`` this
+    extracts finish times from a whole sweep's progress functions in one
     batched pass (Algorithm 2's completion query, vectorized).
     """
     starts = jnp.asarray(starts, jnp.float32)
     coeffs = jnp.asarray(coeffs, jnp.float32)
-    if coeffs.shape[-1] > 2:
-        raise ValueError("ppoly_first_crossing requires piecewise-linear input")
+    if coeffs.shape[-1] > 3:
+        raise ValueError("ppoly_first_crossing requires input of degree <= 2")
     y = jnp.asarray(y, jnp.float32)
     use_pallas, interpret = _flags(use_pallas, interpret)
     return _dispatch_crossing(starts, coeffs, y, use_pallas, interpret,
@@ -165,15 +167,20 @@ def pack_ppolys_np(ppolys, max_pieces: int | None = None, max_coef: int | None =
     return starts, coeffs
 
 
-def pack_bpl_np(starts, c0, c1, dtype=np.float32):
-    """BPL-layout triple ``(starts, c0, c1)`` -> kernel ``(starts, coeffs)``.
+def pack_bpl_np(starts, c0, c1, c2=None, dtype=np.float32):
+    """BPL-layout arrays ``(starts, c0, c1[, c2])`` -> kernel ``(starts, coeffs)``.
 
     The sweep engines (numpy and jax) already keep every function batch in
     this module's padded layout, so handing their outputs to the Pallas ops
-    is a dtype cast plus one coefficient stack — no re-packing.
+    is a dtype cast plus one coefficient stack — no re-packing.  A quadratic
+    plane (``c2``) stacks to a ``(B, P, 3)`` coefficient block; the degree-2
+    query ops accept both widths.
     """
     starts = np.asarray(starts, dtype)
-    coeffs = np.stack([np.asarray(c0), np.asarray(c1)], -1).astype(dtype)
+    planes = [np.asarray(c0), np.asarray(c1)]
+    if c2 is not None:
+        planes.append(np.asarray(c2))
+    coeffs = np.stack(planes, -1).astype(dtype)
     return starts, coeffs
 
 

@@ -77,13 +77,45 @@ def ppoly_min_eval_ref(starts: jnp.ndarray, coeffs: jnp.ndarray, q: jnp.ndarray)
     return vals, arg
 
 
+def first_crossing_candidates(s, c0, c1, c2, plen, y, tol):
+    """Per-piece first-crossing candidate times (shared by the jnp oracle and
+    the Pallas kernel body; broadcastable args).
+
+    Linear pieces use the exact division; quadratic pieces the quadratic
+    formula's numerically-stable q-branch (roots ``q/a`` and ``c/q``) — the
+    float32 mirror of ``repro.core.ppoly.first_pos_root``.  Pieces are
+    monotone nondecreasing on their valid domain, so the smallest
+    non-negative root is the crossing.
+    """
+    # candidate 1: the piece already starts at/above y (covers jumps)
+    cand = jnp.where(c0 >= y - tol, s, _BIG)
+    below = c0 < y - tol
+    # candidate 2: an increasing LINEAR piece crosses y before its end
+    u = (y - c0) / jnp.where(c1 > 0, c1, 1.0)
+    ok = (c2 == 0) & (c1 > 0) & below & (u <= plen)
+    cand = jnp.minimum(cand, jnp.where(ok, s + u, _BIG))
+    # candidate 3: a QUADRATIC piece crosses y before its end (stable roots)
+    b, c = c1, c0 - y
+    disc = b * b - 4.0 * c2 * c
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    qm = -0.5 * (b + jnp.where(b >= 0, sq, -sq))
+    r1 = qm / jnp.where(c2 != 0, c2, 1.0)
+    r2 = c / jnp.where(qm != 0, qm, 1.0)
+    r1 = jnp.where(r1 >= 0, r1, _BIG)
+    r2 = jnp.where((qm != 0) & (r2 >= 0), r2, _BIG)
+    uq = jnp.minimum(r1, r2)
+    okq = (c2 != 0) & (disc >= 0) & below & (uq <= plen)
+    return jnp.minimum(cand, jnp.where(okq, s + uq, _BIG))
+
+
 def ppoly_first_crossing_ref(starts: jnp.ndarray, coeffs: jnp.ndarray,
                              y: jnp.ndarray) -> jnp.ndarray:
-    """First ``t`` with ``f(t) >= y`` for monotone piecewise-LINEAR ``f``.
+    """First ``t`` with ``f(t) >= y`` for monotone piecewise ``f``, degree <= 2.
 
     Args:
       starts: (B, P) piece starts (``PAD_START`` padding).
-      coeffs: (B, P, K) with K <= 2 (piecewise linear; jumps allowed).
+      coeffs: (B, P, K) with K <= 3 (linear or quadratic pieces; jumps
+        allowed).
       y:      (B, T) query levels.
 
     Returns:
@@ -92,18 +124,14 @@ def ppoly_first_crossing_ref(starts: jnp.ndarray, coeffs: jnp.ndarray,
     B, P = starts.shape
     c0 = coeffs[..., 0]
     c1 = coeffs[..., 1] if coeffs.shape[-1] > 1 else jnp.zeros_like(c0)
+    c2 = coeffs[..., 2] if coeffs.shape[-1] > 2 else jnp.zeros_like(c0)
     valid = starts < PAD_START * 0.5                                      # (B,P)
     plen = jnp.concatenate([starts[:, 1:], jnp.full((B, 1), PAD_START)],
                            axis=1) - starts                               # (B,P)
     y_ = y[:, :, None]                                                    # (B,T,1)
-    s_ = starts[:, None, :]
-    c0_, c1_, plen_ = c0[:, None, :], c1[:, None, :], plen[:, None, :]
     tol = 1e-6 * jnp.maximum(1.0, jnp.abs(y_))
-    # candidate 1: the piece already starts at/above y (covers jumps)
-    cand = jnp.where(c0_ >= y_ - tol, s_, _BIG)
-    # candidate 2: an increasing piece crosses y before its end
-    u = (y_ - c0_) / jnp.where(c1_ > 0, c1_, 1.0)
-    ok = (c1_ > 0) & (c0_ < y_ - tol) & (u <= plen_)
-    cand = jnp.minimum(cand, jnp.where(ok, s_ + u, _BIG))
+    cand = first_crossing_candidates(
+        starts[:, None, :], c0[:, None, :], c1[:, None, :], c2[:, None, :],
+        plen[:, None, :], y_, tol)
     cand = jnp.where(valid[:, None, :], cand, _BIG)
     return jnp.min(cand, axis=-1)

@@ -28,9 +28,10 @@ Backends (``plan.sweep(..., backend=...)`` / ``analyze(..., backend=...)``):
   all scenarios advance one Algorithm-2 event per vectorized numpy
   iteration; the reference backend the jax engine must agree with.  Curve
   queries run on the Pallas ``ppoly_eval`` / ``ppoly_min_eval`` /
-  ``ppoly_first_crossing`` kernels.  Both batched engines require
-  piecewise-linear data inputs and piecewise-constant resource rate inputs
-  (everything the paper's evaluation uses).
+  ``ppoly_first_crossing`` kernels.  Both batched engines serve the
+  piecewise-QUADRATIC class: data inputs of degree <= 2 and non-negative
+  piecewise-LINEAR resource rates (ramps — linear rate x linear requirement
+  gives quadratic progress pieces, solved in closed form).
 * ``"loop"`` — the scalar :func:`repro.core.solver.solve` per scenario; the
   reference the batched engines must agree with to float tolerance.
 * ``"auto"`` (default) — the fast path (jax for packs, numpy for lists) for

@@ -3,11 +3,17 @@
 The scalar solver (:func:`repro.core.solver.solve`) advances one process of
 one scenario event by event.  This engine advances *every scenario of a
 sweep* one event per iteration: all state is ``(B,)``-shaped, every event
-time is a closed form (the function class is piecewise-linear, see
-:mod:`.plin`), and each iteration is a handful of vectorized numpy ops.  The
-Python-loop trip count is the *maximum* event count over the batch (tens),
-not ``B × events`` — which is where the >5x-per-scenario speedup over the
-looped scalar solver comes from.
+time is a closed form (the function class is piecewise-quadratic, see
+:mod:`.plin` — piecewise-linear resource inputs make progress pieces
+quadratic, and every event reduces to the stable quadratic formula in
+:func:`repro.core.ppoly.first_pos_root`), and each iteration is a handful of
+vectorized numpy ops.  The Python-loop trip count is the *maximum* event
+count over the batch (tens), not ``B × events`` — which is where the
+>5x-per-scenario speedup over the looped scalar solver comes from.
+
+Purely piecewise-linear sweeps (constant resource rates) take the exact
+pre-quadratic code path: the ``ramp`` flag below gates every widened
+formula, so the legacy class pays nothing for degree-2 support.
 
 The event logic mirrors ``core.solver.solve`` case for case (unconstrained
 ceiling-jumps, burst-resource stalls, data-limited ceiling following,
@@ -27,7 +33,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.ppoly import TIME_TOL
+from repro.core.ppoly import TIME_TOL, VAL_RTOL, first_pos_root
 from repro.core.process import Process
 
 from repro.kernels.ppoly_eval.ref import PAD_START
@@ -111,10 +117,15 @@ def solve_batch(proc: Process, data_bpls: dict[str, BPL],
 
     IR = [res_bpls[l] for l in res_names]
     for l, bpl in zip(res_names, IR):
-        if not bpl.is_piecewise_constant():
+        if bpl.max_degree() > 1:
             raise UnsupportedScenario(
-                f"resource input {l!r} must be piecewise-constant for the "
+                f"resource input {l!r} must be piecewise-linear for the "
                 "batched engine (use the loop backend for richer inputs)")
+    # ramped resources (or quadratic incoming ceilings from a ramped
+    # upstream process) switch every event formula to the quadratic branch;
+    # the purely-linear class keeps the exact legacy arithmetic
+    ramp = (any(bpl.max_degree() > 0 for bpl in IR)
+            or any(c.max_degree() > 1 for c in ceils))
     A = [bpl.antiderivative() for bpl in IR]
     absorbed = [np.zeros((B, len(rb)), bool) for (_l, rb, _c, _j) in res_tables]
 
@@ -131,13 +142,16 @@ def solve_batch(proc: Process, data_bpls: dict[str, BPL],
     rec_t: list[np.ndarray] = []
     rec_c0: list[np.ndarray] = []
     rec_c1: list[np.ndarray] = []
+    rec_c2: list[np.ndarray] = []
     rec_attr: list[np.ndarray] = []
     rec_mask: list[np.ndarray] = []
+    _zeros = np.zeros(B)
 
-    def record(mask, ts, c0s, c1s, attrs):
+    def record(mask, ts, c0s, c1s, attrs, c2s=_zeros):
         rec_t.append(np.where(mask, ts, 0.0))
         rec_c0.append(np.where(mask, c0s, 0.0))
         rec_c1.append(np.where(mask, c1s, 0.0))
+        rec_c2.append(np.where(mask, c2s, 0.0))
         rec_attr.append(np.where(mask, attrs, -1).astype(np.int64))
         rec_mask.append(mask.copy())
 
@@ -148,21 +162,41 @@ def solve_batch(proc: Process, data_bpls: dict[str, BPL],
             break
 
         # ---- ceilings at t (right values/slopes + attribution) -------------
-        V = np.stack([c.eval_right(t) for c in ceils])           # (nC, B)
-        S = np.stack([c.slope_right(t) for c in ceils])          # (nC, B)
-        kstar = V.argmin(0)                                      # ties -> low k
+        if ramp:
+            VSQ = [c.eval_slope_quad_right(t) for c in ceils]
+            V = np.stack([x[0] for x in VSQ])                    # (nC, B)
+            S = np.stack([x[1] for x in VSQ])
+            Qc = np.stack([x[2] for x in VSQ])
+            # ties on value break on slope, then curvature (the function that
+            # is lower just after t governs the piece — the scalar minimum's
+            # midpoint rule, resolved one derivative at a time)
+            vtie = V <= V.min(0) + VAL_RTOL * np.maximum(1.0, np.abs(V.min(0)))
+            St = np.where(vtie, S, _INF)
+            Smin = St.min(0)
+            stie = vtie & (St <= Smin + VAL_RTOL * np.maximum(1.0, np.abs(Smin)))
+            kstar = np.where(stie, Qc, _INF).argmin(0)
+        else:
+            V = np.stack([c.eval_right(t) for c in ceils])       # (nC, B)
+            S = np.stack([c.slope_right(t) for c in ceils])
+            Qc = None
+            kstar = V.argmin(0)                                  # ties -> low k
         pd = V[kstar, arangeB]
         pdslope = S[kstar, arangeB]
+        pdq = Qc[kstar, arangeB] if ramp else _zeros
         tb_ceil = np.min(np.stack([c.next_break_after(t) for c in ceils]), 0)
 
         # ---- resource caps and next requirement breakpoints ----------------
         caps = np.full((max(L, 1), B), _INF)
+        caps1 = np.zeros((max(L, 1), B))       # cap time-derivative (ramped)
         pb = np.full((L, B), _INF) if L else np.zeros((0, B))
         pjump = np.zeros((L, B))
         pbidx = np.zeros((L, B), np.int64)
         tb_ir = np.full(B, _INF)
         for li, (l, rb, rc1, jumps) in enumerate(res_tables):
-            r_now = IR[li].eval_right(t)
+            if ramp:
+                r_now, r_sl, _ = IR[li].eval_slope_quad_right(t)
+            else:
+                r_now = IR[li].eval_right(t)
             tb_ir = np.minimum(tb_ir, IR[li].next_break_after(t))
             # ptol (not TIME_TOL): consistent with the breakpoint scan below —
             # a zero-jump breakpoint within ptol of p counts as passed, so the
@@ -171,6 +205,8 @@ def solve_batch(proc: Process, data_bpls: dict[str, BPL],
             cl = rc1[ri]
             with np.errstate(divide="ignore", invalid="ignore"):
                 caps[li] = np.where(cl > 0, r_now / np.where(cl > 0, cl, 1.0), _INF)
+                if ramp:
+                    caps1[li] = np.where(cl > 0, r_sl / np.where(cl > 0, cl, 1.0), 0.0)
             # first qualifying breakpoint at/above p (mirrors the scalar scan)
             cond = ((rb[None, :] >= p[:, None] - ptol) & ~absorbed[li]
                     & ((jumps[None, :] > 0) | (rb[None, :] > p[:, None] + ptol)))
@@ -179,8 +215,22 @@ def solve_batch(proc: Process, data_bpls: dict[str, BPL],
             pb[li] = np.where(has, rb[j], _INF)
             pjump[li] = np.where(has, jumps[j], 0.0)
             pbidx[li] = j
-        smin = caps.min(0) if L else np.full(B, _INF)
-        lstar = caps.argmin(0) if L else np.zeros(B, np.int64)
+        if not L:
+            smin = np.full(B, _INF)
+            lstar = np.zeros(B, np.int64)
+            smin1 = _zeros
+        elif ramp:
+            smin = caps.min(0)
+            # value ties break on the cap's time-derivative: the cap that is
+            # lower just after t governs the motion
+            ctie = caps <= smin + VAL_RTOL * np.maximum(
+                1.0, np.abs(np.where(np.isfinite(smin), smin, 1.0)))
+            lstar = np.where(ctie, caps1, _INF).argmin(0)
+            smin1 = np.where(np.isfinite(smin), caps1[lstar, arangeB], 0.0)
+        else:
+            smin = caps.min(0)
+            lstar = caps.argmin(0)
+            smin1 = _zeros
 
         # ---- unconstrained: jump instantly toward the data ceiling ---------
         uncon = act & ~np.isfinite(smin) & (p < pd - jtol)
@@ -223,40 +273,92 @@ def solve_batch(proc: Process, data_bpls: dict[str, BPL],
         # ---- movement: data-limited ceiling following or min-slope ---------
         on_ceiling = p >= pd - ftol
         cap_ok = ~np.isfinite(smin) | (pdslope <= smin + 1e-12 * np.maximum(1.0, np.where(np.isfinite(smin), smin, 1.0)))
+        if ramp:
+            # tangency tie-break (mirrors the scalar solver): at
+            # cap == ceiling-slope the rate that is lower just after t
+            # governs — a cap falling faster than the ceiling slope grows
+            # binds immediately
+            smin_s = np.where(np.isfinite(smin), smin, 1.0)
+            eq = np.abs(pdslope - smin_s) <= 1e-9 * np.maximum(1.0, np.abs(smin_s))
+            falling = smin1 < 2.0 * pdq - 1e-12 * np.maximum(1.0, np.abs(pdq))
+            cap_ok = cap_ok & ~(np.isfinite(smin) & eq & falling)
         data_lim = on_ceiling & cap_ok
         slope = np.where(data_lim, pdslope, np.where(np.isfinite(smin), smin, 0.0))
+        # quadratic motion coefficient: the ceiling's curvature when
+        # data-limited, half the cap's time-derivative when resource-limited
+        # (p' = cap(t) linear in t => p quadratic)
+        qmov = (np.where(data_lim, pdq, np.where(np.isfinite(smin),
+                                                 0.5 * smin1, 0.0))
+                if ramp else _zeros)
         attr = np.where(data_lim, kstar, K + lstar)
 
         events = np.stack([tb_ceil, tb_ir])
         # ceiling argmin crossover (the other limiting function takes over)
-        dv = V - pd[None]
-        ds = pdslope[None] - S
-        with np.errstate(divide="ignore", invalid="ignore"):
-            ux = np.where(ds > 1e-300, dv / np.where(ds > 1e-300, ds, 1.0), _INF)
-        ux = np.where(ux > TIME_TOL, ux, _INF)
+        if ramp:
+            dv_s = np.where(np.isfinite(V), V - pd[None], 1.0)
+            ux = first_pos_root(Qc - pdq[None], S - pdslope[None], dv_s)
+            ux = np.where(np.isfinite(V), ux, _INF)
+        else:
+            dv = V - pd[None]
+            ds = pdslope[None] - S
+            with np.errstate(divide="ignore", invalid="ignore"):
+                ux = np.where(ds > 1e-300, dv / np.where(ds > 1e-300, ds, 1.0), _INF)
+            ux = np.where(ux > TIME_TOL, ux, _INF)
         events = np.concatenate([events, (t[None] + ux)])
         # progress reaching a resource-requirement breakpoint
         if L:
-            with np.errstate(divide="ignore", invalid="ignore"):
-                upb = np.where((slope[None] > 0) & np.isfinite(pb),
-                               (pb - p[None]) / np.where(slope[None] > 0, slope[None], 1.0),
-                               _INF)
-            upb = np.where(upb > TIME_TOL, upb, _INF)
+            if ramp:
+                dpb = np.where(np.isfinite(pb), p[None] - pb, 1.0)
+                upb = first_pos_root(np.broadcast_to(qmov, (L, B)),
+                                     np.broadcast_to(slope, (L, B)), dpb)
+                upb = np.where(np.isfinite(pb), upb, _INF)
+            else:
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    upb = np.where((slope[None] > 0) & np.isfinite(pb),
+                                   (pb - p[None]) / np.where(slope[None] > 0, slope[None], 1.0),
+                                   _INF)
+                upb = np.where(upb > TIME_TOL, upb, _INF)
             events = np.concatenate([events, t[None] + upb])
         # catching up with the ceiling (resource-limited below the ceiling)
-        with np.errstate(divide="ignore", invalid="ignore"):
-            ucatch = np.where(~data_lim & (p < pd - jtol) & (slope > pdslope + 1e-300),
-                              (pd - p) / np.where(slope > pdslope, slope - pdslope, 1.0),
-                              _INF)
-        ucatch = np.where(ucatch > TIME_TOL, ucatch, _INF)
+        if ramp:
+            # unlike the linear class, catch-up from EQUALITY is possible: a
+            # decelerating ceiling (pdq < 0) re-meets constant-rate progress
+            # even when p == pd at t, so only data-limited rows are exempt;
+            # the gap is clamped to <= 0 so float noise above the ceiling
+            # cannot schedule a bogus downward crossing
+            ucatch = first_pos_root(qmov - pdq, slope - pdslope,
+                                    np.minimum(p - pd, 0.0))
+            ucatch = np.where(~data_lim, ucatch, _INF)
+        else:
+            with np.errstate(divide="ignore", invalid="ignore"):
+                ucatch = np.where(~data_lim & (p < pd - jtol) & (slope > pdslope + 1e-300),
+                                  (pd - p) / np.where(slope > pdslope, slope - pdslope, 1.0),
+                                  _INF)
+            ucatch = np.where(ucatch > TIME_TOL, ucatch, _INF)
         events = np.concatenate([events, (t + ucatch)[None]])
+        if ramp and L:
+            # governor change: a time-varying cap undercuts the current rate
+            # bound — the ceiling's slope when data-limited (cap becomes
+            # binding mid-piece), the minimum cap when resource-limited (cap
+            # crossover).  Both are linear-in-time crossings.
+            base0 = np.where(data_lim, pdslope, smin)
+            base1 = np.where(data_lim, 2.0 * pdq, smin1)
+            capf = np.isfinite(caps)
+            ug = first_pos_root(np.zeros((max(L, 1), B)), caps1 - base1[None],
+                                np.where(capf, caps - base0[None], 1.0))
+            ug = np.where(capf & np.isfinite(base0)[None], ug, _INF)
+            events = np.concatenate([events, t[None] + ug])
         t_next = events.min(0)
 
-        with np.errstate(divide="ignore", invalid="ignore"):
-            ufin = np.where(slope > 0, (p_end - p) / np.where(slope > 0, slope, 1.0), _INF)
-        t_fin = np.where(ufin > 0, t + ufin, t)
+        if ramp:
+            ufin = first_pos_root(qmov, slope, p - p_end, tol=0.0)
+            t_fin = t + ufin
+        else:
+            with np.errstate(divide="ignore", invalid="ignore"):
+                ufin = np.where(slope > 0, (p_end - p) / np.where(slope > 0, slope, 1.0), _INF)
+            t_fin = np.where(ufin > 0, t + ufin, t)
 
-        record(act, t, p, slope, attr)
+        record(act, t, p, slope, attr, qmov)
         done = act & np.isfinite(t_fin) & (t_fin <= t_next + TIME_TOL)
         finish = np.where(done, t_fin, finish)
         active &= ~done
@@ -267,7 +369,8 @@ def solve_batch(proc: Process, data_bpls: dict[str, BPL],
         if adv.any():
             t_safe = np.where(np.isfinite(t_next), t_next, t)
             pd_left = np.min(np.stack([c.eval_left(t_safe) for c in ceils]), 0)
-            p_new = np.minimum(p + slope * (t_safe - t), pd_left)
+            du = t_safe - t
+            p_new = np.minimum(p + (slope + qmov * du) * du, pd_left)
             p = np.where(adv, np.maximum(p, p_new), p)
             t = np.where(adv, t_safe, t)
 
@@ -276,7 +379,8 @@ def solve_batch(proc: Process, data_bpls: dict[str, BPL],
     finish = np.where(late, t, finish)
 
     progress = _assemble_progress(rec_t, rec_c0, rec_c1, rec_mask,
-                                  t0, finish, p_end)
+                                  t0, finish, p_end,
+                                  rec_c2=rec_c2 if ramp else None)
     share = _aggregate_shares(rec_t, rec_attr, rec_mask, finish, K + L)
     kinds = ["data"] * K + ["resource"] * L
     names = list(data_names) + res_names
@@ -289,18 +393,21 @@ def solve_batch(proc: Process, data_bpls: dict[str, BPL],
                            share_seconds=share, iterations=it)
 
 
-def _assemble_progress(rec_t, rec_c0, rec_c1, rec_mask, t0, finish, p_end):
+def _assemble_progress(rec_t, rec_c0, rec_c1, rec_mask, t0, finish, p_end,
+                       rec_c2=None):
     """Stack recorded pieces into a padded progress BPL, clamped at finish."""
     B = len(t0)
     if rec_t:
         T = np.stack(rec_t, 1)          # (B, I)
         C0 = np.stack(rec_c0, 1)
         C1 = np.stack(rec_c1, 1)
+        C2 = np.stack(rec_c2, 1) if rec_c2 is not None else None
         M = np.stack(rec_mask, 1)
     else:
         T = np.zeros((B, 0))
         C0 = np.zeros((B, 0))
         C1 = np.zeros((B, 0))
+        C2 = np.zeros((B, 0)) if rec_c2 is not None else None
         M = np.zeros((B, 0), bool)
     # drop pieces at/after the finish time; the terminal clamp replaces them
     fin_col = finish[:, None]
@@ -315,27 +422,33 @@ def _assemble_progress(rec_t, rec_c0, rec_c1, rec_mask, t0, finish, p_end):
     starts = np.full((B, P), PAD_START)
     c0 = np.zeros((B, P))
     c1 = np.zeros((B, P))
+    c2 = np.zeros((B, P)) if C2 is not None else None
     order = np.argsort(~M, 1, kind="stable")    # valid pieces first, in order
     Ts = np.take_along_axis(T, order, 1)
     C0s = np.take_along_axis(C0, order, 1)
     C1s = np.take_along_axis(C1, order, 1)
+    C2s = np.take_along_axis(C2, order, 1) if C2 is not None else None
     nkeep = min(P - 1, T.shape[1])
     if nkeep:
         keep = np.arange(nkeep)[None, :] < n_valid[:, None]
         starts[:, :nkeep] = np.where(keep, Ts[:, :nkeep], PAD_START)
         c0[:, :nkeep] = np.where(keep, C0s[:, :nkeep], 0.0)
         c1[:, :nkeep] = np.where(keep, C1s[:, :nkeep], 0.0)
+        if c2 is not None:
+            c2[:, :nkeep] = np.where(keep, C2s[:, :nkeep], 0.0)
     # terminal piece: hold p_end after finish (finished), else nothing to add
     term = np.where(has_fin, finish, PAD_START)
     np.put_along_axis(starts, n_valid[:, None], term[:, None], 1)
     np.put_along_axis(c0, n_valid[:, None],
                       np.where(has_fin, p_end, 0.0)[:, None], 1)
     np.put_along_axis(c1, n_valid[:, None], np.zeros((B, 1)), 1)
+    if c2 is not None:
+        np.put_along_axis(c2, n_valid[:, None], np.zeros((B, 1)), 1)
     # rows with no pieces at all: anchor the domain at t_start with value 0
     empty = (n_valid == 0) & ~has_fin
     if empty.any():
         starts[empty, 0] = t0[empty]
-    return BPL(starts, c0, c1)
+    return BPL(starts, c0, c1, c2)
 
 
 def _aggregate_shares(rec_t, rec_attr, rec_mask, finish, n_factors):

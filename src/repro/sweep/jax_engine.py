@@ -94,8 +94,11 @@ MAX_ITER_CAP = 1024
 
 
 # ---------------------------------------------------------------------------
-# batched piecewise-linear algebra on (starts, c0, c1) triples — the jnp
-# transcription of repro.sweep.plin.BPL (identical semantics, float64)
+# batched piecewise-polynomial algebra on (starts, c0, c1[, c2]) tuples — the
+# jnp transcription of repro.sweep.plin.BPL (identical semantics, float64).
+# The tuple ARITY is the static degree signature: 3 = piecewise-linear,
+# 4 = quadratic; every helper dispatches on it at trace time, so linear
+# sweeps keep the exact pre-quadratic op structure.
 # ---------------------------------------------------------------------------
 
 def _valid(s):
@@ -113,9 +116,12 @@ def _gather(a, i):
 
 
 def _eval(f, t, tol):
-    s, c0, c1 = f
+    s, c0, c1 = f[:3]
     i = _piece_idx(s, t, tol)
-    return _gather(c0, i) + _gather(c1, i) * (t - _gather(s, i))
+    u = t - _gather(s, i)
+    if len(f) == 4:
+        return _gather(c0, i) + (_gather(c1, i) + _gather(f[3], i) * u) * u
+    return _gather(c0, i) + _gather(c1, i) * u
 
 
 def _eval_right(f, t):
@@ -128,15 +134,51 @@ def _eval_left(f, t):
 
 def _eval_slope_right(f, t):
     """(value, slope) at ``t`` sharing one piece-index computation."""
-    s, c0, c1 = f
+    s, c0, c1 = f[:3]
     i = _piece_idx(s, t, TIME_TOL)
     sl = _gather(c1, i)
-    return _gather(c0, i) + sl * (t - _gather(s, i)), sl
+    u = t - _gather(s, i)
+    if len(f) == 4:
+        q = _gather(f[3], i)
+        return _gather(c0, i) + (sl + q * u) * u, sl + 2.0 * q * u
+    return _gather(c0, i) + sl * u, sl
+
+
+def _eval_slope_quad_right(f, t):
+    """(value, slope, quad) at ``t`` — the quadratic widening of
+    :func:`_eval_slope_right` (one shared piece lookup)."""
+    s, c0, c1 = f[:3]
+    i = _piece_idx(s, t, TIME_TOL)
+    sl = _gather(c1, i)
+    u = t - _gather(s, i)
+    if len(f) == 4:
+        q = _gather(f[3], i)
+        return _gather(c0, i) + (sl + q * u) * u, sl + 2.0 * q * u, q
+    return _gather(c0, i) + sl * u, sl, jnp.zeros_like(sl)
 
 
 def _slope_right(f, t):
-    s, _c0, c1 = f
-    return _gather(c1, _piece_idx(s, t, TIME_TOL))
+    s, _c0, c1 = f[:3]
+    i = _piece_idx(s, t, TIME_TOL)
+    sl = _gather(c1, i)
+    if len(f) == 4:
+        sl = sl + 2.0 * _gather(f[3], i) * (t - _gather(s, i))
+    return sl
+
+
+def _first_pos_root(a, b, c, tol=TIME_TOL):
+    """Smallest root ``> tol`` of ``a·u² + b·u + c`` (inf when none) — the
+    jnp twin of :func:`repro.core.ppoly.first_pos_root` (stable q-branch)."""
+    lin = jnp.where(b != 0.0, -c / jnp.where(b != 0.0, b, 1.0), _INF)
+    disc = b * b - 4.0 * a * c
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    q = -0.5 * (b + jnp.where(b >= 0.0, sq, -sq))
+    r1 = jnp.where(a != 0.0, q / jnp.where(a != 0.0, a, 1.0), _INF)
+    r2 = jnp.where(q != 0.0, c / jnp.where(q != 0.0, q, 1.0), _INF)
+    quad = jnp.minimum(jnp.where(r1 > tol, r1, _INF),
+                       jnp.where(r2 > tol, r2, _INF))
+    quad = jnp.where(disc >= 0.0, quad, _INF)
+    return jnp.where(a == 0.0, jnp.where(lin > tol, lin, _INF), quad)
 
 
 def _next_break(f, t):
@@ -147,15 +189,22 @@ def _next_break(f, t):
 
 
 def _first_at_or_above(f, y, t_lo=None):
-    s, c0, c1 = f
+    s, c0, c1 = f[:3]
     y_ = y[..., None]
     nxt = jnp.concatenate([s[..., 1:], jnp.full(s.shape[:-1] + (1,), PAD_START)],
                           -1)
     plen = nxt - s
     tol = VAL_RTOL * jnp.maximum(1.0, jnp.abs(y_)) + 1e-12
     cand = jnp.where(c0 >= y_ - tol, s, _INF)
-    u = (y_ - c0) / jnp.where(c1 > 0, c1, 1.0)
-    ok = (c1 > 0) & (c0 < y_ - tol) & (u <= plen + TIME_TOL)
+    if len(f) == 4:
+        # exact quadratic crossing: pieces are monotone nondecreasing on
+        # their valid domain, so the smallest positive root is the crossing
+        u = _first_pos_root(jnp.broadcast_to(f[3], (y_ - c0).shape), c1,
+                            c0 - y_, tol=0.0)
+        ok = (c0 < y_ - tol) & (u <= plen + TIME_TOL)
+    else:
+        u = (y_ - c0) / jnp.where(c1 > 0, c1, 1.0)
+        ok = (c1 > 0) & (c0 < y_ - tol) & (u <= plen + TIME_TOL)
     cand = jnp.minimum(cand, jnp.where(ok, s + u, _INF))
     cand = jnp.where(_valid(s), cand, _INF)
     out = cand.min(-1)
@@ -164,40 +213,51 @@ def _first_at_or_above(f, y, t_lo=None):
     return out
 
 
-def _antiderivative(f):
-    s, c0, _c1 = f
+def _antiderivative(f, linear_rate: bool = False):
+    s, c0, c1 = f[:3]
     nxt = jnp.concatenate([s[..., 1:], jnp.full(s.shape[:-1] + (1,), PAD_START)],
                           -1)
     plen = jnp.where(nxt < PAD_START * 0.5, nxt - s, 0.0)
+    if linear_rate:  # ramped rates: trapezoid areas, quadratic result
+        areas = jnp.where(_valid(s), (c0 + 0.5 * c1 * plen) * plen, 0.0)
+        acc = jnp.concatenate([jnp.zeros(s.shape[:-1] + (1,)),
+                               jnp.cumsum(areas, -1)[..., :-1]], -1)
+        return (s, acc, c0, 0.5 * c1)
     areas = jnp.where(_valid(s), c0 * plen, 0.0)
     acc = jnp.concatenate([jnp.zeros(s.shape[:-1] + (1,)),
                            jnp.cumsum(areas, -1)[..., :-1]], -1)
     return (s, acc, c0)
 
 
-def _stack_triples(triples):
-    """Stack per-function (B, P_k) triples into one (F, B, Pmax) triple."""
-    Pm = max(tr[0].shape[-1] for tr in triples)
+def _stack_fns(fns, arity: int | None = None):
+    """Stack per-function (B, P_k) tuples into one (F, B, Pmax) tuple,
+    promoting mixed degrees to the widest arity (zero quad planes)."""
+    Pm = max(tr[0].shape[-1] for tr in fns)
+    arity = arity or max(len(tr) for tr in fns)
 
     def padded(tr):
-        s, c0, c1 = tr
-        extra = Pm - s.shape[-1]
-        if extra:
-            s = jnp.concatenate(
-                [s, jnp.full(s.shape[:-1] + (extra,), PAD_START)], -1)
-            c0 = jnp.concatenate([c0, jnp.zeros(c0.shape[:-1] + (extra,))], -1)
-            c1 = jnp.concatenate([c1, jnp.zeros(c1.shape[:-1] + (extra,))], -1)
-        return s, c0, c1
+        if len(tr) < arity:
+            tr = tr + (jnp.zeros(tr[0].shape),)
+        out = []
+        extra = Pm - tr[0].shape[-1]
+        for k, a in enumerate(tr):
+            if extra:
+                fill = PAD_START if k == 0 else 0.0
+                a = jnp.concatenate(
+                    [a, jnp.full(a.shape[:-1] + (extra,), fill)], -1)
+            out.append(a)
+        return out
 
-    ps = [padded(tr) for tr in triples]
-    return tuple(jnp.stack([p[k] for p in ps]) for k in range(3))
+    ps = [padded(tr) for tr in fns]
+    return tuple(jnp.stack([p[k] for p in ps]) for k in range(arity))
 
 
-def _insert_col(S, V, SL, cs, cv, csl):
-    """Insert one (start, value, slope) column into row-sorted triples —
+def _insert_col(cols, cvals):
+    """Insert one column (start + per-plane values) into row-sorted planes —
     a shifted-select, O(B*P), in place of a row sort."""
+    S = cols[0]
     P = S.shape[1]
-    pos = (S <= cs[:, None]).sum(1)[:, None]
+    pos = (S <= cvals[0][:, None]).sum(1)[:, None]
     j = jnp.arange(P + 1)[None, :]
 
     def ins(X, xcol):
@@ -206,39 +266,53 @@ def _insert_col(S, V, SL, cs, cv, csl):
         return jnp.where(j < pos, below,
                          jnp.where(j == pos, xcol[:, None], above))
 
-    return ins(S, cs), ins(V, cv), ins(SL, csl)
+    return tuple(ins(X, xc) for X, xc in zip(cols, cvals))
 
 
 def _compose(outer, inner, B):
     """``outer(inner(t))`` for a static scalar pw-linear ``outer`` (np triple)
-    and a batched monotone ``inner`` — plin.compose_scalar in jnp.
+    and a batched monotone ``inner`` of degree <= 2 — plin.compose_scalar in
+    jnp.  A linear outer maps each inner piece affinely, so the result keeps
+    the inner's arity.
 
     The numpy twin concatenates breakpoint candidates, row-sorts them, and
     re-evaluates the inner function at every merged start.  Here the inner
-    pieces already carry their (value, slope) at their own starts (``c0``,
-    ``c1``), so only the outer-breakpoint crossings — one ``(B,)`` column per
-    outer piece — need evaluating, and each column is merged by positional
+    pieces already carry their (value, slope[, quad]) at their own starts,
+    so only the outer-breakpoint crossings — one ``(B,)`` column per outer
+    piece — need evaluating, and each column is merged by positional
     insertion.  No sort, no (B, M, P) evaluation blowup: XLA on CPU pays
     dearly for both.
     """
-    S, V, SL = inner
+    quad = len(inner) == 4
+    planes = inner
     if len(outer[0]) == 1:  # single-piece outer: a pure affine transform
+        S, V, SL = inner[:3]
         s0, a0, a1 = (float(x[0]) for x in outer)
         pad = S >= PAD_START * 0.5
-        return (S, jnp.where(pad, 0.0, a0 + a1 * (V - s0)),
-                jnp.where(pad, 0.0, a1 * SL))
+        out = (S, jnp.where(pad, 0.0, a0 + a1 * (V - s0)),
+               jnp.where(pad, 0.0, a1 * SL))
+        if quad:
+            out = out + (jnp.where(pad, 0.0, a1 * inner[3]),)
+        return out
     o_s, o_c0, o_c1 = (jnp.asarray(a) for a in outer)
     for v in outer[0][1:]:  # static python loop over outer breakpoints
         cross = _first_at_or_above(inner, jnp.full(B, float(v)))
         cs = jnp.where(jnp.isfinite(cross), cross, PAD_START)
-        cv = _eval_right(inner, cs)
-        csl = _slope_right(inner, cs)
-        S, V, SL = _insert_col(S, V, SL, cs, cv, csl)
+        if quad:
+            cv, csl, cqd = _eval_slope_quad_right(inner, cs)
+            planes = _insert_col(planes, (cs, cv, csl, cqd))
+        else:
+            cv, csl = _eval_slope_right(inner, cs)
+            planes = _insert_col(planes, (cs, cv, csl))
+    S, V, SL = planes[:3]
     oi = jnp.maximum(jnp.searchsorted(o_s, V + TIME_TOL, side="right") - 1, 0)
     c0 = o_c0[oi] + o_c1[oi] * (V - o_s[oi])
     c1 = o_c1[oi] * SL
     pad = S >= PAD_START * 0.5
-    return (S, jnp.where(pad, 0.0, c0), jnp.where(pad, 0.0, c1))
+    out = (S, jnp.where(pad, 0.0, c0), jnp.where(pad, 0.0, c1))
+    if quad:
+        out = out + (jnp.where(pad, 0.0, o_c1[oi] * planes[3]),)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -301,14 +375,22 @@ class _WorkflowSpec:
 # one process: the Algorithm-2 lockstep loop as lax.while_loop
 # ---------------------------------------------------------------------------
 
-def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
+def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int,
+                ramps: bool = False):
     """Mirror of ``engine.solve_batch``'s event loop with fixed-size record
     buffers (two slots per iteration: burst-stall, then movement).
 
-    All ceilings are stacked into one ``(nC, B, P)`` triple and all resource
+    All ceilings are stacked into one ``(nC, B, P)`` tuple and all resource
     inputs into ``(L, B, P)`` so every per-iteration query is a single
     fused-width op rather than a Python loop of per-function ops — XLA on
     CPU pays per-op dispatch, so op count is what the loop body optimizes.
+
+    ``ramps`` is the static degree switch: False keeps the piecewise-linear
+    trace unchanged; True widens the existing ops to the quadratic class
+    (time-varying caps, curved ceilings, quadratic motion) — every event
+    stays one closed-form :func:`_first_pos_root` instead of a division, so
+    the per-iteration op count grows only by the two genuinely new event
+    families (governor change, tangency tie-break).
     """
     p_end = ps.p_end
     nC = len(ceils)
@@ -321,10 +403,10 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
     has_jumps = any(np.any(jumps > 0) for (_rb, _c, jumps) in ps.res_tables)
     spi = 2 if has_jumps else 1                       # record slots per iter
     R = spi * iter_cap
-    C = _stack_triples(ceils)                                   # (nC, B, P)
+    C = _stack_fns(ceils, arity=4 if ramps else 3)              # (nC, B, P)
     if L:
-        IRs = _stack_triples(IR)                                # (L, B, P)
-        As = _antiderivative(IRs) if has_jumps else None
+        IRs = _stack_fns(IR, arity=3)                           # (L, B, P)
+        As = _antiderivative(IRs, linear_rate=ramps) if has_jumps else None
         n_rb = max(len(rb) for (rb, _c, _j) in ps.res_tables)
         rbs = np.full((L, n_rb), _INF)
         rc1s = np.zeros((L, n_rb))
@@ -354,25 +436,49 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
 
         # ---- ceilings at t (right values/slopes + attribution) -------------
         tC = jnp.broadcast_to(t, (nC, B))
-        V, S = _eval_slope_right(C, tC)                         # (nC, B)
-        if nC > 1:
-            kstar = jnp.argmin(V, 0)
-            pd = jnp.take_along_axis(V, kstar[None], 0)[0]
-            pdslope = jnp.take_along_axis(S, kstar[None], 0)[0]
+        if ramps:
+            V, S, Q = _eval_slope_quad_right(C, tC)             # (nC, B)
+            if nC > 1:
+                # value ties break on slope, then curvature: the ceiling that
+                # is lower just after t governs (mirrors the numpy twin)
+                vmin = V.min(0)
+                vtie = V <= vmin + VAL_RTOL * jnp.maximum(1.0, jnp.abs(vmin))
+                St = jnp.where(vtie, S, _INF)
+                Smin = St.min(0)
+                stie = vtie & (St <= Smin + VAL_RTOL * jnp.maximum(
+                    1.0, jnp.abs(Smin)))
+                kstar = jnp.argmin(jnp.where(stie, Q, _INF), 0).astype(jnp.int32)
+                pd = jnp.take_along_axis(V, kstar[None], 0)[0]
+                pdslope = jnp.take_along_axis(S, kstar[None], 0)[0]
+                pdq = jnp.take_along_axis(Q, kstar[None], 0)[0]
+            else:
+                kstar = jnp.zeros(B, jnp.int32)
+                pd, pdslope, pdq = V[0], S[0], Q[0]
         else:
-            kstar = jnp.zeros(B, jnp.int32)
-            pd, pdslope = V[0], S[0]
+            V, S = _eval_slope_right(C, tC)                     # (nC, B)
+            if nC > 1:
+                kstar = jnp.argmin(V, 0)
+                pd = jnp.take_along_axis(V, kstar[None], 0)[0]
+                pdslope = jnp.take_along_axis(S, kstar[None], 0)[0]
+            else:
+                kstar = jnp.zeros(B, jnp.int32)
+                pd, pdslope = V[0], S[0]
         tb_ceil = _next_break(C, tC).min(0)
 
         # ---- resource caps and next requirement breakpoints ----------------
         if L:
             tL = jnp.broadcast_to(t, (L, B))
-            r_now = _eval_right(IRs, tL)                        # (L, B)
+            if ramps:
+                r_now, r_sl = _eval_slope_right(IRs, tL)        # (L, B)
+            else:
+                r_now = _eval_right(IRs, tL)                    # (L, B)
             tb_ir = _next_break(IRs, tL).min(0)
             # searchsorted(rb, p + ptol, "right") - 1, per resource row
             ri = jnp.maximum((rbs <= (p[None, :, None] + ptol)).sum(-1) - 1, 0)
             cl = _gather(jnp.broadcast_to(rc1s, (L, B, n_rb)), ri)
             caps = jnp.where(cl > 0, r_now / jnp.where(cl > 0, cl, 1.0), _INF)
+            if ramps:
+                caps1 = jnp.where(cl > 0, r_sl / jnp.where(cl > 0, cl, 1.0), 0.0)
             if has_jumps:
                 cond_bp = ((rbs >= p[None, :, None] - ptol) & ~absorbed
                            & ((jumpss > 0) | (rbs > p[None, :, None] + ptol)))
@@ -384,12 +490,23 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
             pb = jnp.where(has,
                            _gather(jnp.broadcast_to(rbs, (L, B, n_rb)), pbidx),
                            _INF)
-            if L > 1:
+            if L > 1 and ramps:
+                smin = caps.min(0)
+                # value ties break on the cap derivative (falling cap wins)
+                smin_s = jnp.where(jnp.isfinite(smin), smin, 1.0)
+                ctie = caps <= smin + VAL_RTOL * jnp.maximum(1.0, jnp.abs(smin_s))
+                lstar = jnp.argmin(jnp.where(ctie, caps1, _INF), 0).astype(jnp.int32)
+                smin1 = jnp.where(jnp.isfinite(smin),
+                                  jnp.take_along_axis(caps1, lstar[None], 0)[0],
+                                  0.0)
+            elif L > 1:
                 smin = caps.min(0)
                 lstar = caps.argmin(0)
             else:
                 smin = caps[0]
                 lstar = jnp.zeros(B, jnp.int32)
+                if ramps:
+                    smin1 = jnp.where(jnp.isfinite(smin), caps1[0], 0.0)
             if has_jumps:
                 pjump = jnp.where(
                     has, _gather(jnp.broadcast_to(jumpss, (L, B, n_rb)), pbidx),
@@ -397,6 +514,7 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
         else:
             tb_ir = jnp.full(B, _INF)
             smin = jnp.full(B, _INF)
+            smin1 = jnp.zeros(B)
             lstar = jnp.zeros(B, kstar.dtype)
             pb = jnp.zeros((0, B))
 
@@ -430,7 +548,8 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
                                       == pbidx[..., None]))
             stalled = act & (stall_end > -_INF)
             rec0 = (jnp.where(stalled, t, 0.0), jnp.where(stalled, p, 0.0),
-                    jnp.zeros(B), jnp.where(stalled, stall_attr, -1), stalled)
+                    jnp.zeros(B), jnp.where(stalled, stall_attr, -1), stalled,
+                    jnp.zeros(B) if ramps else None)
             dead = stalled & ~jnp.isfinite(stall_end)
             active = active & ~dead
             t = jnp.where(stalled & jnp.isfinite(stall_end), stall_end, t)
@@ -443,41 +562,91 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
         cap_ok = ~jnp.isfinite(smin) | (
             pdslope <= smin + 1e-12 * jnp.maximum(
                 1.0, jnp.where(jnp.isfinite(smin), smin, 1.0)))
+        if ramps:
+            # tangency tie-break (mirrors the numpy twin): at
+            # cap == ceiling-slope the rate that is lower just after t
+            # governs — a falling cap binds immediately
+            smin_s = jnp.where(jnp.isfinite(smin), smin, 1.0)
+            eq = jnp.abs(pdslope - smin_s) <= 1e-9 * jnp.maximum(
+                1.0, jnp.abs(smin_s))
+            falling = smin1 < 2.0 * pdq - 1e-12 * jnp.maximum(1.0,
+                                                              jnp.abs(pdq))
+            cap_ok = cap_ok & ~(jnp.isfinite(smin) & eq & falling)
         data_lim = on_ceiling & cap_ok
         slope = jnp.where(data_lim, pdslope,
                           jnp.where(jnp.isfinite(smin), smin, 0.0))
+        if ramps:
+            qmov = jnp.where(data_lim, pdq,
+                             jnp.where(jnp.isfinite(smin), 0.5 * smin1, 0.0))
         attr = jnp.where(data_lim, kstar, K + lstar).astype(jnp.int32)
 
         events = jnp.stack([tb_ceil, tb_ir])
         if nC > 1:  # ceiling argmin crossover (impossible with one ceiling)
-            dv = V - pd[None]
-            ds = pdslope[None] - S
-            ux = jnp.where(ds > 1e-300, dv / jnp.where(ds > 1e-300, ds, 1.0),
-                           _INF)
-            ux = jnp.where(ux > TIME_TOL, ux, _INF)
+            if ramps:
+                ux = _first_pos_root(Q - pdq[None], S - pdslope[None],
+                                     V - pd[None])
+            else:
+                dv = V - pd[None]
+                ds = pdslope[None] - S
+                ux = jnp.where(ds > 1e-300, dv / jnp.where(ds > 1e-300, ds, 1.0),
+                               _INF)
+                ux = jnp.where(ux > TIME_TOL, ux, _INF)
             events = jnp.concatenate([events, t[None] + ux])
         if L:
-            upb = jnp.where((slope[None] > 0) & jnp.isfinite(pb),
-                            (pb - p[None]) / jnp.where(slope[None] > 0,
-                                                       slope[None], 1.0),
-                            _INF)
-            upb = jnp.where(upb > TIME_TOL, upb, _INF)
+            if ramps:
+                upb = _first_pos_root(qmov[None], slope[None],
+                                      jnp.where(jnp.isfinite(pb),
+                                                p[None] - pb, 1.0))
+                upb = jnp.where(jnp.isfinite(pb), upb, _INF)
+            else:
+                upb = jnp.where((slope[None] > 0) & jnp.isfinite(pb),
+                                (pb - p[None]) / jnp.where(slope[None] > 0,
+                                                           slope[None], 1.0),
+                                _INF)
+                upb = jnp.where(upb > TIME_TOL, upb, _INF)
             events = jnp.concatenate([events, t[None] + upb])
-        ucatch = jnp.where(~data_lim & (p < pd - jtol) & (slope > pdslope + 1e-300),
-                           (pd - p) / jnp.where(slope > pdslope,
-                                                slope - pdslope, 1.0),
-                           _INF)
-        ucatch = jnp.where(ucatch > TIME_TOL, ucatch, _INF)
+        if ramps:
+            # catch-up from EQUALITY is possible in the quadratic class (a
+            # decelerating ceiling re-meets slower progress), so only
+            # data-limited rows are exempt; the gap clamps to <= 0 so float
+            # noise above the ceiling cannot schedule a bogus crossing
+            ucatch = _first_pos_root(qmov - pdq, slope - pdslope,
+                                     jnp.minimum(p - pd, 0.0))
+            ucatch = jnp.where(~data_lim, ucatch, _INF)
+        else:
+            ucatch = jnp.where(~data_lim & (p < pd - jtol) & (slope > pdslope + 1e-300),
+                               (pd - p) / jnp.where(slope > pdslope,
+                                                    slope - pdslope, 1.0),
+                               _INF)
+            ucatch = jnp.where(ucatch > TIME_TOL, ucatch, _INF)
         events = jnp.concatenate([events, (t + ucatch)[None]])
+        if ramps and L:
+            # governor change: a time-varying cap undercuts the current rate
+            # bound — the ceiling slope when data-limited, the minimum cap
+            # when resource-limited (cap crossover); linear-in-time crossing
+            base0 = jnp.where(data_lim, pdslope, smin)
+            base1 = jnp.where(data_lim, 2.0 * pdq, smin1)
+            db = caps1 - base1[None]
+            dc = jnp.where(jnp.isfinite(caps), caps - base0[None], 1.0)
+            ug = jnp.where(db != 0.0, -dc / jnp.where(db != 0.0, db, 1.0),
+                           _INF)
+            ug = jnp.where((ug > TIME_TOL) & jnp.isfinite(caps)
+                           & jnp.isfinite(base0)[None], ug, _INF)
+            events = jnp.concatenate([events, t[None] + ug])
         t_next = events.min(0)
 
-        ufin = jnp.where(slope > 0, (p_end - p) / jnp.where(slope > 0, slope, 1.0),
-                         _INF)
-        t_fin = jnp.where(ufin > 0, t + ufin, t)
+        if ramps:
+            ufin = _first_pos_root(qmov, slope, p - p_end, tol=0.0)
+            t_fin = t + ufin
+        else:
+            ufin = jnp.where(slope > 0, (p_end - p) / jnp.where(slope > 0, slope, 1.0),
+                             _INF)
+            t_fin = jnp.where(ufin > 0, t + ufin, t)
 
         # movement record captures the pre-advance state
         rec1 = (jnp.where(act, t, 0.0), jnp.where(act, p, 0.0),
-                jnp.where(act, slope, 0.0), jnp.where(act, attr, -1), act)
+                jnp.where(act, slope, 0.0), jnp.where(act, attr, -1), act,
+                jnp.where(act, qmov, 0.0) if ramps else None)
 
         done = act & jnp.isfinite(t_fin) & (t_fin <= t_next + TIME_TOL)
         finish = jnp.where(done, t_fin, finish)
@@ -488,7 +657,11 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
         adv = cont & ~stuck
         t_safe = jnp.where(jnp.isfinite(t_next), t_next, t)
         pd_left = _eval_left(C, jnp.broadcast_to(t_safe, (nC, B))).min(0)
-        p_new = jnp.minimum(p + slope * (t_safe - t), pd_left)
+        du = t_safe - t
+        if ramps:
+            p_new = jnp.minimum(p + (slope + qmov * du) * du, pd_left)
+        else:
+            p_new = jnp.minimum(p + slope * du, pd_left)
         p = jnp.where(adv, jnp.maximum(p, p_new), p)
         t = jnp.where(adv, t_safe, t)
 
@@ -499,7 +672,7 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
             return lax.dynamic_update_slice(
                 buf, block, (jnp.zeros((), it.dtype), spi * it))
 
-        r0 = rec0 or (None,) * 5
+        r0 = rec0 or (None,) * 6
         recT = upd(st["recT"], *((r0[0], rec1[0]) if has_jumps
                                  else (rec1[0], None)))
         recC0 = upd(st["recC0"], *((r0[1], rec1[1]) if has_jumps
@@ -511,9 +684,13 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
         recM = upd(st["recM"], *((r0[4], rec1[4]) if has_jumps
                                  else (rec1[4], None)))
 
-        return {"it": it + 1, "t": t, "p": p, "finish": finish,
-                "active": active, "absorbed": absorbed, "recT": recT,
-                "recC0": recC0, "recC1": recC1, "recA": recA, "recM": recM}
+        out = {"it": it + 1, "t": t, "p": p, "finish": finish,
+               "active": active, "absorbed": absorbed, "recT": recT,
+               "recC0": recC0, "recC1": recC1, "recA": recA, "recM": recM}
+        if ramps:
+            out["recC2"] = upd(st["recC2"], *((r0[5], rec1[5]) if has_jumps
+                                              else (rec1[5], None)))
+        return out
 
     init = {
         "it": jnp.zeros((), jnp.int32),
@@ -529,6 +706,8 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
         "recA": jnp.full((B, R), -1, jnp.int32),
         "recM": jnp.zeros((B, R), bool),
     }
+    if ramps:
+        init["recC2"] = jnp.zeros((B, R))
     st = lax.while_loop(cond, body, init)
 
     p, t, finish, active = st["p"], st["t"], st["finish"], st["active"]
@@ -536,14 +715,16 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int):
     finish = jnp.where(late, t, finish)
     overflow = jnp.any(active & (p < p_end - ftol))
     progress = _assemble_progress(st["recT"], st["recC0"], st["recC1"],
-                                  st["recM"], t0, finish, p_end, B, R)
+                                  st["recM"], t0, finish, p_end, B, R,
+                                  C2=st.get("recC2"))
     share = _aggregate_shares(st["recT"], st["recA"], st["recM"], finish,
                               K + L, B, R)
     return {"finish": finish, "progress": progress, "share": share,
             "iterations": st["it"], "overflow": overflow}
 
 
-def _assemble_progress(T, C0, C1, M, t0, finish, p_end, B: int, R: int):
+def _assemble_progress(T, C0, C1, M, t0, finish, p_end, B: int, R: int,
+                       C2=None):
     """engine._assemble_progress with a static piece budget ``P = R + 1``.
 
     Instead of compacting valid pieces to the front (a stable sort — slow in
@@ -574,6 +755,9 @@ def _assemble_progress(T, C0, C1, M, t0, finish, p_end, B: int, R: int):
     C1f = grab(C1x, 0.0)
     empty = ~Mx.any(1)
     Sf = Sf.at[:, 0].set(jnp.where(empty, t0, Sf[:, 0]))
+    if C2 is not None:
+        C2f = grab(jnp.concatenate([C2, jnp.zeros((B, 1))], 1), 0.0)
+        return (Sf, C0f, C1f, C2f)
     return (Sf, C0f, C1f)
 
 
@@ -613,17 +797,16 @@ def _aggregate_shares(T, ATTR, M, finish, n_factors: int, B: int, R: int):
 # whole-workflow runner + engine front end
 # ---------------------------------------------------------------------------
 
-def _bcast(triple, B: int):
-    s, c0, c1 = triple
-    if s.shape[0] == B:
-        return (s, c0, c1)
-    P = s.shape[1]
-    return tuple(jnp.broadcast_to(a, (B, P)) for a in (s, c0, c1))
+def _bcast(fn, B: int):
+    if fn[0].shape[0] == B:
+        return fn
+    P = fn[0].shape[1]
+    return tuple(jnp.broadcast_to(a, (B, P)) for a in fn)
 
 
 def _pad_args(args: dict, B: int, Bp: int) -> dict:
-    """Pad every full-batch (B, P) triple to Bp rows by replicating the last
-    scenario (single-row broadcast triples are left alone)."""
+    """Pad every full-batch (B, P) tuple to Bp rows by replicating the last
+    scenario (single-row broadcast tuples are left alone)."""
     def pad(tr):
         if np.asarray(tr[0]).shape[0] != B:
             return tr  # single-row broadcast: replicated per device later
@@ -657,7 +840,7 @@ class JaxSweepEngine:
         self._proven_caps: dict = {}
 
     # -- trace construction -------------------------------------------------
-    def _make_run(self, B: int, iter_cap: int):
+    def _make_run(self, B: int, iter_cap: int, ramps: bool):
         spec = self.spec
 
         def run(args):
@@ -683,7 +866,7 @@ class JaxSweepEngine:
                     ceils = [(t0[:, None], jnp.full((B, 1), ps.p_end),
                               jnp.zeros((B, 1)))]
                 IR = [_bcast(a["res"][r], B) for r in ps.res_names]
-                res = _solve_proc(ps, ceils, IR, t0, B, iter_cap)
+                res = _solve_proc(ps, ceils, IR, t0, B, iter_cap, ramps)
                 finish_by[ps.name] = res["finish"]
                 progress_by[ps.name] = res["progress"]
                 overflow = overflow | res.pop("overflow")
@@ -693,35 +876,37 @@ class JaxSweepEngine:
 
         return run
 
-    def _get_compiled(self, B: int, shards: int, iter_cap: int):
-        key = (B, shards, iter_cap)
+    def _get_compiled(self, B: int, shards: int, iter_cap: int, ramps: bool):
+        key = (B, shards, iter_cap, ramps)
         if key not in self._compiled:
             if shards > 1:
                 if B % shards:
                     raise ValueError(
                         f"sharded solve needs B divisible by shard count "
                         f"(B={B}, shards={shards}); pad via ScenarioPack.shard")
-                fn = jax.pmap(self._make_run(B // shards, iter_cap))
+                fn = jax.pmap(self._make_run(B // shards, iter_cap, ramps))
             else:
-                fn = jax.jit(self._make_run(B, iter_cap))
+                fn = jax.jit(self._make_run(B, iter_cap, ramps))
             self._compiled[key] = fn
         return self._compiled[key]
 
     # -- host-side argument marshalling ------------------------------------
     def device_args(self, args_np: dict, B: int, shards: int = 1) -> dict:
-        """Numpy triples -> device pytree (reshaped ``(D, B/D, P)`` when
-        sharded; single-row broadcast triples are replicated per device)."""
+        """Numpy tuples -> device pytree (reshaped ``(D, B/D, P)`` when
+        sharded; single-row broadcast tuples are replicated per device).
+        Quadratic batches ship their ``c2`` plane as a 4th array — the tuple
+        arity is part of the pytree structure the trace specializes on."""
         def put(tr):
-            s, c0, c1 = (np.asarray(a, np.float64) for a in tr)
+            arrs = tuple(np.asarray(a, np.float64) for a in tr)
             if shards > 1:
                 D = shards
-                if s.shape[0] == 1:
-                    s, c0, c1 = (np.broadcast_to(a, (D, 1, a.shape[1]))
-                                 for a in (s, c0, c1))
+                if arrs[0].shape[0] == 1:
+                    arrs = tuple(np.broadcast_to(a, (D, 1, a.shape[1]))
+                                 for a in arrs)
                 else:
-                    s, c0, c1 = (a.reshape(D, B // D, a.shape[1])
-                                 for a in (s, c0, c1))
-            return tuple(jnp.asarray(a) for a in (s, c0, c1))
+                    arrs = tuple(a.reshape(D, B // D, a.shape[1])
+                                 for a in arrs)
+            return tuple(jnp.asarray(a) for a in arrs)
 
         return {proc: {grp: {k: put(tr) for k, tr in grp_args.items()}
                        for grp, grp_args in proc_args.items()}
@@ -731,9 +916,15 @@ class JaxSweepEngine:
     def solve(self, args, B: int, *, shards: int = 1,
               cache: dict | None = None,
               scenario_ids: list[int] | None = None,
+              ramps: bool = False,
               ) -> dict[str, BatchProcResult]:
         """Run the compiled sweep; adaptively double the iteration budget on
         overflow (recompiling) up to ``MAX_ITER_CAP``.
+
+        ``ramps`` is the static degree switch (see :func:`_solve_proc`):
+        pass True when any packed resource input has a non-zero slope or any
+        packed function a quadratic plane — the pack computes this once
+        (:attr:`ScenarioPack.ramps`).
 
         With ``shards > 1`` the scenario axis is padded up to a multiple of
         the shard count (padding rows replicate the last scenario, are
@@ -741,6 +932,7 @@ class JaxSweepEngine:
         devices with ``jax.pmap``.
         """
         shards = int(shards)
+        ramps = bool(ramps)
         if shards > jax.local_device_count():
             raise ValueError(
                 f"shards={shards} but only {jax.local_device_count()} JAX "
@@ -759,9 +951,9 @@ class JaxSweepEngine:
             dev = self.device_args(args, Bp, shards)
             if cache is not None:
                 cache[key] = dev
-        cap = self._proven_caps.get((Bp, shards), self.iter_cap)
+        cap = self._proven_caps.get((Bp, shards, ramps), self.iter_cap)
         while True:
-            fn = self._get_compiled(Bp, shards, cap)
+            fn = self._get_compiled(Bp, shards, cap, ramps)
             out = fn(dev)
             if not bool(np.asarray(out["__overflow__"]).any()):
                 break
@@ -770,7 +962,7 @@ class JaxSweepEngine:
                 raise UnsupportedScenario(
                     f"jax engine exceeded {MAX_ITER_CAP} lockstep iterations; "
                     "use the numpy backend for this workload")
-        self._proven_caps[(Bp, shards)] = cap
+        self._proven_caps[(Bp, shards, ramps)] = cap
         return self._wrap(out, B, shards, scenario_ids)
 
     def _wrap(self, out, B: int, shards: int,

@@ -206,9 +206,9 @@ def _ramp_workflow():
 
 def test_mixed_sweep_routes_per_scenario_and_warns_once():
     wf = _ramp_workflow()
-    ramp = PPoly.pwlinear([0.0, 50.0], [5.0, 20.0])  # not pw-constant
+    quad = PPoly(np.array([0.0]), [np.array([5.0, 0.1, 0.01])])  # degree 2
     scs = [sweep.Scenario(label="fast", resource_inputs={("dl", "link"): PPoly.constant(20.0)}),
-           sweep.Scenario(label="ramp", resource_inputs={("dl", "link"): ramp}),
+           sweep.Scenario(label="quad", resource_inputs={("dl", "link"): quad}),
            sweep.Scenario(label="slow", resource_inputs={("dl", "link"): PPoly.constant(5.0)})]
     plan = wf.compile()
     with warnings.catch_warnings(record=True) as caught:
@@ -236,9 +236,9 @@ def test_mixed_sweep_routes_per_scenario_and_warns_once():
 
 def test_explicit_batched_raises_for_mixed():
     wf = _ramp_workflow()
-    ramp = PPoly.pwlinear([0.0, 50.0], [5.0, 20.0])
-    scs = [sweep.Scenario(resource_inputs={("dl", "link"): ramp})]
-    with pytest.raises(sweep.UnsupportedScenario, match="piecewise-constant"):
+    quad = PPoly(np.array([0.0]), [np.array([5.0, 0.1, 0.01])])
+    scs = [sweep.Scenario(resource_inputs={("dl", "link"): quad})]
+    with pytest.raises(sweep.UnsupportedScenario, match="piecewise-linear"):
         wf.compile().sweep(scs, backend="batched")
 
 

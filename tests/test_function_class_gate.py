@@ -1,0 +1,72 @@
+"""CI fallback-rate gate — the tentpole's contract, enforced forever.
+
+The quadratic batched function class must serve (a) the paper workflow's
+sweeps and (b) sweeps with piecewise-linear resource overrides (the
+monitoring-derived shape) with ZERO scalar-loop fallbacks: the fallback rate
+surfaced by ``Report.summary()`` / ``Report.fallback_indices`` is exactly
+what ``backend="auto"`` routing silently degrades through, so a regression
+here turns the fast path back into the Python loop without failing any
+numeric assertion.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.analysis import ramp_resource, scenarios
+from repro.configs.paper_workflow import build_workflow, sweep_scenarios
+
+from test_sweep import _assert_match
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return build_workflow(0.5).compile()
+
+
+def _assert_no_fallback(rep, B):
+    assert rep.fallback_indices == []
+    assert set(rep.backends) <= {"jax", "batched"}
+    s = rep.summary()
+    assert "fallback" not in s and "loop" not in s
+    assert f"{B} scenario(s)" in s
+
+
+def test_paper_workflow_sweep_zero_fallbacks(plan):
+    scs = sweep_scenarios(np.linspace(0.1, 0.9, 9))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # the fallback warning must not fire
+        rep = plan.sweep(plan.prepare(scs), backend="auto")
+    _assert_no_fallback(rep, 9)
+    assert set(rep.backends) == {"jax"}
+
+
+def test_plin_resource_sweep_zero_fallbacks(plan):
+    """Piecewise-linear resource overrides (ramps) stay on the fast path."""
+    scs = [ramp_resource("dl1", "link", [0.0, 60.0, 200.0],
+                         [r0, r1, r1], label=f"ramp{i}")
+           for i, (r0, r1) in enumerate([(2e6, 0.5e6), (0.5e6, 2e6),
+                                         (1e6, 0.2e6), (0.0, 2e6)])]
+    pack = plan.prepare(scs)
+    assert pack.ramps and pack.loop_idx == []
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        rep = plan.sweep(pack, backend="auto")
+    _assert_no_fallback(rep, 4)
+    assert set(rep.backends) == {"jax"}
+    # and the fast path is not just routed but CORRECT
+    _assert_match(rep, plan.sweep(scs, backend="loop"))
+
+
+def test_plin_override_grid_zero_fallbacks(plan):
+    """The DSL route: a grid mixing scale factors and explicit ramps."""
+    from repro.core import PPoly
+
+    ramp = PPoly.pwlinear([0.0, 100.0], [0.5e6, 2e6])
+    scs = scenarios.grid({"dl1.link": [0.5, 1.0, ramp],
+                          "task1.cpu": [1.0, 2.0]})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        rep = plan.sweep(plan.prepare(scs), backend="auto")
+    _assert_no_fallback(rep, 6)

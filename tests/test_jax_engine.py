@@ -138,13 +138,14 @@ def test_adaptive_iter_cap_growth():
     _assert_match(rj, rn)
     # the proven budget is persisted per shape (re-sweeps skip the ladder)
     # without ratcheting the default for other shapes
-    assert plan._jax_engine._proven_caps[(1, 1)] > 1
+    assert plan._jax_engine._proven_caps[(1, 1, False)] > 1
     assert plan._jax_engine.iter_cap == 1
     _assert_match(plan.sweep(pack, backend="jax"), rn)
 
 
 def test_explicit_jax_backend_raises_out_of_class():
-    wf = _single(PPoly.pwlinear([0.0, 50.0], [5.0, 20.0]))  # not pw-const
+    # degree-2 resource rate: outside even the quadratic batched class
+    wf = _single(PPoly(np.array([0.0]), [np.array([5.0, 0.1, 0.01])]))
     with pytest.raises(sweep.UnsupportedScenario):
         wf.compile().sweep([sweep.Scenario()], backend="jax")
 

@@ -140,10 +140,35 @@ def test_first_crossing_matches_scalar(use_pallas):
 
 
 def test_first_crossing_rejects_high_degree():
-    f = PPoly(np.array([0.0]), [np.array([0.0, 1.0, 1.0])])
+    f = PPoly(np.array([0.0]), [np.array([0.0, 1.0, 1.0, 1.0])])  # cubic
     starts, coeffs = pack_ppolys([f])
-    with pytest.raises(ValueError, match="piecewise-linear"):
+    with pytest.raises(ValueError, match="degree <= 2"):
         ppoly_first_crossing(starts, coeffs, np.zeros((1, 1), np.float32))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_first_crossing_quadratic_matches_scalar(use_pallas):
+    """Degree-2 pieces (ramped-allocation progress class) use the stable
+    quadratic branch and agree with the exact scalar query."""
+    fns = [PPoly(np.array([0.0, 10.0]), [np.array([0.0, 1.0, 0.5]),
+                                         np.array([60.0, 11.0])]),
+           PPoly(np.array([0.0]), [np.array([0.0, 0.0, 2.0])]),    # pure t^2
+           PPoly(np.array([0.0, 4.0]), [np.array([0.0, 8.0, -1.0]),
+                                        np.array([16.0])])]        # flat tail
+    starts, coeffs = pack_ppolys(fns)
+    assert coeffs.shape[-1] == 3
+    y = np.array([[0.0, 3.0, 59.0, 80.0],
+                  [0.5, 2.0, 50.0, 128.0],
+                  [1.0, 7.0, 15.9, 40.0]], np.float32)
+    out = np.asarray(ppoly_first_crossing(starts, coeffs, y,
+                                          use_pallas=use_pallas))
+    for b, f in enumerate(fns):
+        for j in range(y.shape[1]):
+            exact = f.first_time_at_or_above(float(y[b, j]), float(f.starts[0]))
+            if np.isfinite(exact):
+                assert out[b, j] == pytest.approx(exact, rel=1e-4, abs=1e-3), (b, j)
+            else:
+                assert out[b, j] >= 1e29, (b, j)
 
 
 def test_min_eval_pallas_agrees_with_ref():

@@ -118,7 +118,11 @@ def test_pack_override_validates(plan):
     with pytest.raises(ValueError, match="produced by"):
         pack.override({"task1.video": 2.0})
     with pytest.raises(sweep.UnsupportedScenario, match="function class"):
-        pack.override({"task1.cpu": PPoly.pwlinear([0.0, 5.0], [1.0, 3.0])})
+        pack.override({"task1.cpu": PPoly(np.array([0.0]),
+                                          [np.array([1.0, 0.1, 0.01])])})
+    # a piecewise-linear ramp is INSIDE the batched class now
+    ramped = pack.override({"task1.cpu": PPoly.pwlinear([0.0, 5.0], [1.0, 3.0])})
+    assert ramped.loop_idx == pack.loop_idx
     with pytest.raises(ValueError, match="entries"):
         pack.override({"task1.cpu": [1.0, 2.0]})  # B=1 but 2 entries
 
@@ -199,11 +203,11 @@ def _mixed_setup():
                    total_progress=n).identity_output(),
            resources={"link": PPoly.constant(10.0)})
     wf.set_data_input("dl", "file", PPoly.constant(n))
-    ramp = PPoly.pwlinear([0.0, 50.0], [5.0, 20.0])
+    quad = PPoly(np.array([0.0]), [np.array([5.0, 0.1, 0.01])])  # degree 2
     scs = [sweep.Scenario(label="fast",
                           resource_inputs={("dl", "link"): PPoly.constant(20.0)}),
-           sweep.Scenario(label="ramp",
-                          resource_inputs={("dl", "link"): ramp}),
+           sweep.Scenario(label="quad",
+                          resource_inputs={("dl", "link"): quad}),
            sweep.Scenario(label="slow",
                           resource_inputs={("dl", "link"): PPoly.constant(5.0)})]
     return wf.compile(), scs
@@ -261,3 +265,19 @@ def test_bench_compare_rows():
     _, ok = compare_rows([{"name": "a", "us_per_call": 100.0}],
                          [{"name": "a", "us_per_call": 115.0}])
     assert ok == []
+
+
+def test_bench_compare_null_vs_null_row_is_informational():
+    """Regression: a row untimed on BOTH sides (roofline_cells' explicit
+    skip row) must be reported as informational and never gate (exit 0)."""
+    sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
+    try:
+        from run import compare_rows
+    finally:
+        sys.path.pop(0)
+    skip = {"name": "roofline_cells", "us_per_call": None,
+            "derived": "skipped: no dryrun results"}
+    lines, regressions = compare_rows([skip], [dict(skip)])
+    assert regressions == []
+    assert "informational" in "\n".join(lines)
+    assert "no timing on one side" not in "\n".join(lines)

@@ -240,13 +240,33 @@ def test_scenario_validation():
 
 
 def test_unsupported_scenario_falls_back_to_loop():
-    wf = _single(PPoly.pwlinear([0.0, 50.0], [5.0, 20.0]))  # ramp: not pw-const
+    # degree-2 resource rate: outside even the quadratic batched class
+    # (quadratic rate x linear requirement -> cubic progress)
+    wf = _single(PPoly(np.array([0.0]), [np.array([5.0, 0.1, 0.01])]))
     rb = sweep.analyze(wf, [sweep.Scenario()], backend="auto")
     assert rb.backend == "loop"
     with pytest.raises(sweep.UnsupportedScenario):
         sweep.analyze(wf, [sweep.Scenario()], backend="batched")
     # loop backend agrees with a direct scalar analysis
     assert rb.makespan[0] == pytest.approx(wf.analyze().makespan)
+
+
+def test_negative_ramp_resource_falls_back_to_loop():
+    # a rate that goes negative is outside the model class of the batched
+    # engines (progress would decrease) — scalar loop handles it as spec'd
+    wf = _single(PPoly.pwlinear([0.0, 50.0], [10.0, -2.0]))
+    rb = sweep.analyze(wf, [sweep.Scenario()], backend="auto")
+    assert rb.backend == "loop"
+
+
+def test_ramp_resource_is_batched_and_matches_scalar():
+    """Piecewise-linear resource inputs are IN the batched class: quadratic
+    progress pieces, zero scalar fallbacks (the tentpole contract)."""
+    wf = _single(PPoly.pwlinear([0.0, 50.0], [5.0, 20.0]))
+    rb = sweep.analyze(wf, [sweep.Scenario()], backend="auto")
+    assert rb.backends == ["batched"]
+    rl = sweep.analyze(wf, [sweep.Scenario()], backend="loop")
+    _assert_match(rb, rl)
 
 
 def test_kernel_finish_times_agree():
