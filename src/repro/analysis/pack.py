@@ -72,6 +72,26 @@ class ScenarioPack:
                                    compare=False)
 
     # ------------------------------------------------------------------
+    def host_args(self) -> dict:
+        """Materialize (and memoize) the packed per-process input arrays.
+
+        This is the numpy pytree the jax engine's level packer consumes
+        (``{process: {"res"|"data"|"ceil": {name: (starts, c0, c1[, c2])}}}``);
+        the engine groups it by topology level (padding per-process specs
+        onto a leading process axis) and composes every static data ceiling
+        host-side, so nothing loop-invariant is re-dispatched per re-sweep.
+        Memoized in the pack's cache alongside the device arrays —
+        ``override()`` re-packs start from a fresh cache.
+        """
+        key = ("host",)
+        if key not in self._cache:
+            self._cache[key] = {
+                name: {grp: {k: bpl.arrays() for k, bpl in grp_args.items()}
+                       for grp, grp_args in proc_args.items()}
+                for name, proc_args in self.proc_args.items()}
+        return self._cache[key]
+
+    # ------------------------------------------------------------------
     @property
     def B(self) -> int:
         return len(self.scenarios)
@@ -131,7 +151,10 @@ class ScenarioPack:
                             scenarios=self.scenarios, bat_idx=self.bat_idx,
                             loop_idx=self.loop_idx, reason=self.reason,
                             proc_args=self.proc_args, shards=n,
-                            ramps=self.ramps)
+                            ramps=self.ramps,
+                            # sharded sweeps key device arrays by shard
+                            # count, so the memo is safe (and warm) to share
+                            _cache=self._cache)
 
     # ------------------------------------------------------------------
     def override(self, inputs: Mapping[Any, Any]) -> "ScenarioPack":

@@ -81,6 +81,20 @@ class CompiledWorkflow:
         #: (process, data_dep) -> producing process, for pipelined edges
         self.edge_sources: dict[tuple[str, str], str] = {
             (e.dst, e.dep): e.src for e in wf.edges}
+        #: topology levels: processes grouped by longest-path depth over
+        #: edges AND gates.  Processes in one level share no dependencies,
+        #: so the jax engine stacks each level into ONE fused lockstep loop
+        #: (the level signature is its compile key); the numpy/scalar paths
+        #: only read the flat ``order``.
+        depth: dict[str, int] = {}
+        for n in self.order:
+            deps = ([src for (src, _o, _d) in self.edges_in[n]]
+                    + self.gates.get(n, []))
+            depth[n] = 1 + max((depth[d] for d in deps), default=-1)
+        self.levels: list[list[str]] = [
+            [] for _ in range(max(depth.values(), default=-1) + 1)]
+        for n in self.order:
+            self.levels[depth[n]].append(n)
         self.base_res: dict[tuple[str, str], PPoly] = {
             (n, r): wf.resource_alloc[n][r]
             for n in self.order for r in wf.processes[n].resources}
@@ -476,11 +490,9 @@ class CompiledWorkflow:
 
         if self._jax_engine is None:
             self._jax_engine = JaxSweepEngine(self)
-        args = lambda: {  # noqa: E731 — built only on device-cache miss
-            name: {grp: {k: bpl.arrays() for k, bpl in grp_args.items()}
-                   for grp, grp_args in proc_args.items()}
-            for name, proc_args in pack.proc_args.items()}
-        results = self._jax_engine.solve(args, pack.B_batched,
+        # host_args is called only on device-cache miss; the engine then
+        # stacks it by topology level (level_args) before the transfer
+        results = self._jax_engine.solve(pack.host_args, pack.B_batched,
                                          shards=pack.shards, cache=pack._cache,
                                          scenario_ids=pack.bat_idx,
                                          ramps=pack.ramps)

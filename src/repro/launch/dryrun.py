@@ -53,6 +53,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # one dict per device
+                cost = cost[0]
             hlo = compiled.as_text()
             # track attention-score-sized tensors: the Pallas flash kernel
             # (validated in tests, unloweable on the CPU dry-run backend)

@@ -1,15 +1,32 @@
-"""Jit-compiled lockstep engine — the numpy engine fused into one XLA call.
+"""Jit-compiled LEVEL-FUSED lockstep engine — the numpy engine in one XLA call.
 
 :mod:`.engine` advances every scenario one event per *Python* iteration; each
 iteration is a handful of numpy dispatches, so a sweep pays thousands of tiny
 host ops.  This module transcribes the same Algorithm-2 event loop — case for
-case, tolerance for tolerance — into ``jax.numpy`` float64 with the event
-loop as a ``jax.lax.while_loop`` over stacked ``(B,)`` state and fixed-shape
-``(B, R)`` record buffers, and the whole *workflow* (per-process solves plus
-the eq. (1) ceiling compositions along the DAG edges) traced into ONE jitted
-function.  A prepared :class:`~repro.analysis.pack.ScenarioPack` then makes a
-re-sweep a single compiled call: no resolution, no packing, no Python event
-loop.
+case, tolerance for tolerance — into ``jax.numpy`` float64, and fuses the
+whole *workflow* into ONE jitted function.
+
+Execution model (level fusion): the compiled plan topo-sorts the DAG into
+**topology levels** (``CompiledWorkflow.levels``) — processes in one level
+share no edges or gates, so their event loops are independent.  The engine
+stacks every process of a level onto a leading process axis and runs ONE
+``lax.while_loop`` per *level* over ``(Lp, B)`` state with fixed-shape
+``(Lp, B, R)`` record buffers: the paper workflow traces to 3 loops instead
+of 5, wide DAG levels get intra-level parallelism for free, and the loop trip
+count per level is the *maximum* event count over its processes, not the sum.
+Per-process specs (total progress, tolerances, requirement tables, resource
+and ceiling slots) are padded to the level maxima at pack time; padded
+resource slots never bind (infinite cap) and padded ceiling slots sit far
+above any real ceiling.
+
+The loop body is tuned for op count, not flops — XLA on CPU pays per-op
+dispatch: value/slope/next-breakpoint ceiling queries share one gathered
+piece lookup (:func:`_locate`), the resource-cap and burst-antiderivative
+evaluations share the resource piece index, every record buffer write is ONE
+``dynamic_update_slice`` per iteration (a stacked ``(nbuf, Lp, B, spi)``
+block), and loop-invariant compositions (data-ceiling pre-composition, the
+antiderivative piece-length tables) are hoisted out of the trace entirely —
+static (non-edge-fed) ceilings are composed host-side at pack time.
 
 Layout is shared with :mod:`repro.kernels.ppoly_eval`: every function batch
 is a padded ``(B, P)`` triple ``(starts, c0, c1)`` using the kernels'
@@ -18,7 +35,8 @@ ops without re-packing.
 
 The numpy engine stays the reference backend: the test suite asserts the two
 agree to float tolerance on makespans, finish times, progress curves, AND
-bottleneck attribution (``share_seconds``).
+bottleneck attribution (``share_seconds``) — on the paper workflow and on
+randomized DAGs with wide and diamond levels.
 
 Sharding: :meth:`JaxSweepEngine.solve` splits the scenario axis across
 devices with ``jax.pmap`` when built with ``shards > 1`` — each device runs
@@ -48,9 +66,10 @@ from repro.core.ppoly import PPoly, TIME_TOL, VAL_RTOL  # noqa: E402
 from repro.kernels.ppoly_eval.ref import PAD_START  # noqa: E402
 
 from .engine import BatchProcResult  # noqa: E402
-from .plin import BPL, UnsupportedScenario  # noqa: E402
+from .plin import BPL, UnsupportedScenario, compose_scalar  # noqa: E402
 
-__all__ = ["JaxSweepEngine", "LazyCeilings", "DEFAULT_ITER_CAP", "MAX_ITER_CAP"]
+__all__ = ["JaxSweepEngine", "LazyCeilings", "DEFAULT_ITER_CAP",
+           "MAX_ITER_CAP", "trace_report"]
 
 
 class LazyCeilings:
@@ -83,6 +102,10 @@ class LazyCeilings:
 
 _INF = float("inf")
 
+#: value of a padded (inert) ceiling slot: far above any real ceiling, far
+#: below the PAD_START sentinel so it can never read as padding
+_PAD_CEIL = 9e29
+
 #: initial lockstep iteration budget of the compiled loop (events per
 #: scenario are typically a handful); doubled adaptively up to MAX_ITER_CAP
 #: when a solve reports overflow, at the cost of one recompile per doubling.
@@ -113,6 +136,22 @@ def _piece_idx(s, t, tol):
 
 def _gather(a, i):
     return jnp.take_along_axis(a, i[..., None], -1)[..., 0]
+
+
+def _locate(f, t):
+    """Piece index AND next breakpoint after ``t`` from ONE comparison.
+
+    ``s > t + TIME_TOL`` is exactly the complement of the right-eval piece
+    test ``s <= t + TIME_TOL``, so the two per-iteration queries the loop
+    body makes against every function (value/slope at ``t``, next event
+    breakpoint) share a single ``(..., P)`` comparison — on CPU each saved
+    op is a saved dispatch.
+    """
+    s = f[0]
+    cmp = s <= (t[..., None] + TIME_TOL)
+    i = jnp.maximum(cmp.sum(-1) - 1, 0)
+    nb = jnp.where(_valid(s) & ~cmp, s, _INF).min(-1)
+    return i, nb
 
 
 def _eval(f, t, tol):
@@ -157,15 +196,6 @@ def _eval_slope_quad_right(f, t):
     return _gather(c0, i) + sl * u, sl, jnp.zeros_like(sl)
 
 
-def _slope_right(f, t):
-    s, _c0, c1 = f[:3]
-    i = _piece_idx(s, t, TIME_TOL)
-    sl = _gather(c1, i)
-    if len(f) == 4:
-        sl = sl + 2.0 * _gather(f[3], i) * (t - _gather(s, i))
-    return sl
-
-
 def _first_pos_root(a, b, c, tol=TIME_TOL):
     """Smallest root ``> tol`` of ``a·u² + b·u + c`` (inf when none) — the
     jnp twin of :func:`repro.core.ppoly.first_pos_root` (stable q-branch)."""
@@ -181,19 +211,19 @@ def _first_pos_root(a, b, c, tol=TIME_TOL):
     return jnp.where(a == 0.0, jnp.where(lin > tol, lin, _INF), quad)
 
 
-def _next_break(f, t):
-    """Smallest start ``> t + TIME_TOL`` over ALL leading dims but B."""
+def _piece_len(f):
+    """Per-piece domain length (loop-invariant — hoisted out of the body)."""
     s = f[0]
-    cand = jnp.where(_valid(s) & (s > t[..., None] + TIME_TOL), s, _INF)
-    return cand.min(-1)
-
-
-def _first_at_or_above(f, y, t_lo=None):
-    s, c0, c1 = f[:3]
-    y_ = y[..., None]
     nxt = jnp.concatenate([s[..., 1:], jnp.full(s.shape[:-1] + (1,), PAD_START)],
                           -1)
-    plen = nxt - s
+    return nxt - s
+
+
+def _first_at_or_above(f, y, t_lo=None, plen=None):
+    s, c0, c1 = f[:3]
+    y_ = y[..., None]
+    if plen is None:
+        plen = _piece_len(f)
     tol = VAL_RTOL * jnp.maximum(1.0, jnp.abs(y_)) + 1e-12
     cand = jnp.where(c0 >= y_ - tol, s, _INF)
     if len(f) == 4:
@@ -229,29 +259,6 @@ def _antiderivative(f, linear_rate: bool = False):
     return (s, acc, c0)
 
 
-def _stack_fns(fns, arity: int | None = None):
-    """Stack per-function (B, P_k) tuples into one (F, B, Pmax) tuple,
-    promoting mixed degrees to the widest arity (zero quad planes)."""
-    Pm = max(tr[0].shape[-1] for tr in fns)
-    arity = arity or max(len(tr) for tr in fns)
-
-    def padded(tr):
-        if len(tr) < arity:
-            tr = tr + (jnp.zeros(tr[0].shape),)
-        out = []
-        extra = Pm - tr[0].shape[-1]
-        for k, a in enumerate(tr):
-            if extra:
-                fill = PAD_START if k == 0 else 0.0
-                a = jnp.concatenate(
-                    [a, jnp.full(a.shape[:-1] + (extra,), fill)], -1)
-            out.append(a)
-        return out
-
-    ps = [padded(tr) for tr in fns]
-    return tuple(jnp.stack([p[k] for p in ps]) for k in range(arity))
-
-
 def _insert_col(cols, cvals):
     """Insert one column (start + per-plane values) into row-sorted planes —
     a shifted-select, O(B*P), in place of a row sort."""
@@ -282,6 +289,10 @@ def _compose(outer, inner, B):
     piece — need evaluating, and each column is merged by positional
     insertion.  No sort, no (B, M, P) evaluation blowup: XLA on CPU pays
     dearly for both.
+
+    Only EDGE-FED ceilings (whose inner is an upstream progress computed in
+    the same trace) go through this in-trace path; static ceilings are
+    composed host-side at pack time (:meth:`JaxSweepEngine.level_args`).
     """
     quad = len(inner) == 4
     planes = inner
@@ -338,52 +349,125 @@ class _ProcSpec:
     gate_names: tuple[str, ...]
     #: dep -> (src process, output-fn triple) for pipelined (edge-fed) deps
     edges: dict
-    #: dep -> requirement triple for external deps (ceiling composition)
+    #: dep -> requirement triple for edge-fed deps (in-trace composition)
     reqs: dict
+    #: dep -> requirement PPoly for static deps (host-side pre-composition)
+    req_fns: dict
     res_names: tuple[str, ...]
     #: per resource: (breakpoints, marginal slopes, jump magnitudes)
     res_tables: tuple
 
 
-@dataclass(frozen=True)
-class _WorkflowSpec:
+@dataclass(frozen=True, eq=False)
+class _LevelSpec:
+    """One topology level: the static, level-padded view of its processes.
+
+    This is the engine's compile key at level granularity — everything the
+    trace specializes on (process count, ceiling/resource slot maxima,
+    burst presence, requirement tables) lives here, so two workflows with
+    the same level signature produce the same loop structure.
+    """
+
     procs: tuple[_ProcSpec, ...]
+    nC: int                 # max ceiling slots over the level's processes
+    Lr: int                 # max resource slots over the level's processes
+    n_rb: int               # max requirement-table rows (padded with +inf)
+    has_jumps: bool         # any burst (jump) requirement in the level
+    static_ceils: bool      # True when NO process has edge-fed deps
+    #: True when a LATER level composes against this level's progress —
+    #: only then is the progress assembled inline; all other levels join
+    #: one deferred stacked assembly at the end of the trace
+    progress_inline: bool
+    p_end: np.ndarray       # (Lp, 1)
+    ptol: np.ndarray        # (Lp, 1) progress tolerance (per-process scale)
+    ftol: np.ndarray        # (Lp, 1) finish tolerance
+    jtol: np.ndarray        # (Lp, 1) jump tolerance
+    rbs: np.ndarray | None      # (Lr, Lp, 1, n_rb) requirement breakpoints
+    rc1s: np.ndarray | None     # (Lr, Lp, 1, n_rb) marginal slopes
+    jumpss: np.ndarray | None   # (Lr, Lp, 1, n_rb) burst jump magnitudes
+
+
+@dataclass(frozen=True, eq=False)
+class _WorkflowSpec:
+    procs: tuple[_ProcSpec, ...]        # topo order (for result unwrapping)
+    levels: tuple[_LevelSpec, ...]
 
     @staticmethod
     def from_plan(plan) -> "_WorkflowSpec":
         wf = plan.workflow
-        procs = []
+        by_name: dict[str, _ProcSpec] = {}
         for name in plan.order:
             proc = wf.processes[name]
             edges = {dep: (src, _ppoly_triple(wf.processes[src].outputs[out]))
                      for (src, out, dep) in plan.edges_in[name]}
             reqs = {d: _ppoly_triple(dd.requirement)
-                    for d, dd in proc.data.items()}
+                    for d, dd in proc.data.items() if d in edges}
+            req_fns = {d: dd.requirement
+                       for d, dd in proc.data.items() if d not in edges}
             tables = tuple((rb, rc1, jumps)
                            for (_l, rb, rc1, jumps) in plan.res_tables[name])
-            procs.append(_ProcSpec(
+            by_name[name] = _ProcSpec(
                 name=name, p_end=float(proc.total_progress),
                 data_names=tuple(proc.data.keys()),
                 gate_names=tuple(plan.gates.get(name, [])),
-                edges=edges, reqs=reqs,
+                edges=edges, reqs=reqs, req_fns=req_fns,
                 res_names=tuple(l for (l, *_r) in plan.res_tables[name]),
-                res_tables=tables))
-        return _WorkflowSpec(tuple(procs))
+                res_tables=tables)
+        edge_srcs = {src for ps in by_name.values()
+                     for (src, _fn) in ps.edges.values()}
+        levels = []
+        for names in plan.levels:
+            lprocs = tuple(by_name[n] for n in names)
+            Lp = len(lprocs)
+            nC = max(max(len(ps.data_names), 1) for ps in lprocs)
+            Lr = max(len(ps.res_names) for ps in lprocs)
+            has_jumps = any(np.any(j > 0) for ps in lprocs
+                            for (_rb, _c, j) in ps.res_tables)
+            n_rb = max((len(rb) for ps in lprocs
+                        for (rb, _c, _j) in ps.res_tables), default=1)
+            if Lr:
+                rbs = np.full((Lr, Lp, 1, n_rb), _INF)
+                rc1s = np.zeros((Lr, Lp, 1, n_rb))
+                jumpss = np.zeros((Lr, Lp, 1, n_rb))
+                for pi, ps in enumerate(lprocs):
+                    for li, (rb, rc1, jumps) in enumerate(ps.res_tables):
+                        rbs[li, pi, 0, :len(rb)] = rb
+                        rc1s[li, pi, 0, :len(rb)] = rc1
+                        jumpss[li, pi, 0, :len(rb)] = jumps
+            else:
+                rbs = rc1s = jumpss = None
+            p_end = np.array([[ps.p_end] for ps in lprocs])
+            levels.append(_LevelSpec(
+                procs=lprocs, nC=nC, Lr=Lr, n_rb=n_rb, has_jumps=has_jumps,
+                static_ceils=all(not ps.edges for ps in lprocs),
+                progress_inline=any(ps.name in edge_srcs for ps in lprocs),
+                p_end=p_end,
+                ptol=1e-9 * np.maximum(1.0, p_end),
+                ftol=1e-9 * np.maximum(1.0, p_end),
+                jtol=1e-12 * np.maximum(1.0, p_end),
+                rbs=rbs, rc1s=rc1s, jumpss=jumpss))
+        return _WorkflowSpec(tuple(by_name[n] for n in plan.order),
+                             tuple(levels))
 
 
 # ---------------------------------------------------------------------------
-# one process: the Algorithm-2 lockstep loop as lax.while_loop
+# one topology level: the Algorithm-2 lockstep loop as ONE lax.while_loop
+# over every process of the level (leading process axis Lp)
 # ---------------------------------------------------------------------------
 
-def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int,
-                ramps: bool = False):
-    """Mirror of ``engine.solve_batch``'s event loop with fixed-size record
-    buffers (two slots per iteration: burst-stall, then movement).
+def _solve_level(ls: _LevelSpec, C, IR, t0, B: int, iter_cap: int,
+                 ramps: bool = False):
+    """Mirror of ``engine.solve_batch``'s event loop, stacked over the
+    ``Lp`` processes of one topology level, with fixed-size record buffers
+    (two slots per iteration: burst-stall, then movement).
 
-    All ceilings are stacked into one ``(nC, B, P)`` tuple and all resource
-    inputs into ``(L, B, P)`` so every per-iteration query is a single
-    fused-width op rather than a Python loop of per-function ops — XLA on
-    CPU pays per-op dispatch, so op count is what the loop body optimizes.
+    State is ``(Lp, B)``; ceilings ``C`` come stacked as ``(nC, Lp, B, P)``
+    and resource inputs ``IR`` as ``(Lr, Lp, B, P)``, so every
+    per-iteration query is a single fused-width op across the whole level —
+    XLA on CPU pays per-op dispatch, so op count is what the loop body
+    optimizes.  Padded ceiling slots sit at ``_PAD_CEIL`` (never the min);
+    padded resource slots have zero marginal requirement (infinite cap,
+    never binding).
 
     ``ramps`` is the static degree switch: False keeps the piecewise-linear
     trace unchanged; True widens the existing ops to the quadratic class
@@ -392,52 +476,43 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int,
     the per-iteration op count grows only by the two genuinely new event
     families (governor change, tangency tie-break).
     """
-    p_end = ps.p_end
-    nC = len(ceils)
-    K = len(ps.data_names)
-    L = len(ps.res_names)
-    # static structure flags: burst-free resources skip the whole stall
-    # machinery (and its record slot), the single-ceiling / single-resource
-    # cases skip their argmin bookkeeping — XLA on CPU pays per op, so dead
-    # generality in the loop body is a per-iteration tax on every sweep
-    has_jumps = any(np.any(jumps > 0) for (_rb, _c, jumps) in ps.res_tables)
-    spi = 2 if has_jumps else 1                       # record slots per iter
+    Lp = len(ls.procs)
+    nC, Lr, n_rb = ls.nC, ls.Lr, ls.n_rb
+    has_jumps = ls.has_jumps
+    p_end = jnp.asarray(ls.p_end)                       # (Lp, 1)
+    ptol = jnp.asarray(ls.ptol)
+    ftol = jnp.asarray(ls.ftol)
+    jtol = jnp.asarray(ls.jtol)
+    spi = 2 if has_jumps else 1                         # record slots per iter
     R = spi * iter_cap
-    C = _stack_fns(ceils, arity=4 if ramps else 3)              # (nC, B, P)
-    if L:
-        IRs = _stack_fns(IR, arity=3)                           # (L, B, P)
-        As = _antiderivative(IRs, linear_rate=ramps) if has_jumps else None
-        n_rb = max(len(rb) for (rb, _c, _j) in ps.res_tables)
-        rbs = np.full((L, n_rb), _INF)
-        rc1s = np.zeros((L, n_rb))
-        jumpss = np.zeros((L, n_rb))
-        for li, (rb, rc1, jumps) in enumerate(ps.res_tables):
-            rbs[li, :len(rb)] = rb
-            rc1s[li, :len(rb)] = rc1
-            jumpss[li, :len(rb)] = jumps
-        rbs, rc1s, jumpss = (jnp.asarray(a)[:, None, :]         # (L, 1, n_rb)
-                             for a in (rbs, rc1s, jumpss))
-    else:
-        n_rb = 1
-    ptol = 1e-9 * max(1.0, p_end)
-    ftol = 1e-9 * max(1.0, p_end)
-    jtol = 1e-12 * max(1.0, p_end)
+    nbuf = 6 if ramps else 5                            # T, C0, C1, A, M[, C2]
+    if Lr:
+        As = _antiderivative(IR, linear_rate=ramps) if has_jumps else None
+        A_plen = _piece_len(As) if has_jumps else None  # hoisted, invariant
+        rbs = jnp.asarray(ls.rbs)                       # (Lr, Lp, 1, n_rb)
+        rc1s = jnp.broadcast_to(jnp.asarray(ls.rc1s), (Lr, Lp, B, n_rb))
+        jumpss = jnp.broadcast_to(jnp.asarray(ls.jumpss), (Lr, Lp, B, n_rb))
 
     def cond(st):
         return (st["it"] < iter_cap) & jnp.any(st["active"]
                                                & (st["p"] < p_end - ftol))
 
     def body(st):
-        t, p = st["t"], st["p"]
+        t, p = st["t"], st["p"]                         # (Lp, B)
         finish, active = st["finish"], st["active"]
-        absorbed = st["absorbed"]                               # (L, B, n_rb)
+        absorbed = st["absorbed"]                       # (Lr, Lp, B, n_rb)
         it = st["it"]
         act = active & (p < p_end - ftol)
 
-        # ---- ceilings at t (right values/slopes + attribution) -------------
-        tC = jnp.broadcast_to(t, (nC, B))
+        # ---- ceilings at t: value/slope/next-break from ONE piece lookup ---
+        tC = jnp.broadcast_to(t, (nC, Lp, B))
+        iC, nbC = _locate(C, tC)
+        uC = tC - _gather(C[0], iC)
+        slC = _gather(C[2], iC)
         if ramps:
-            V, S, Q = _eval_slope_quad_right(C, tC)             # (nC, B)
+            Q = _gather(C[3], iC)
+            V = _gather(C[1], iC) + (slC + Q * uC) * uC             # (nC,Lp,B)
+            S = slC + 2.0 * Q * uC
             if nC > 1:
                 # value ties break on slope, then curvature: the ceiling that
                 # is lower just after t governs (mirrors the numpy twin)
@@ -452,45 +527,52 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int,
                 pdslope = jnp.take_along_axis(S, kstar[None], 0)[0]
                 pdq = jnp.take_along_axis(Q, kstar[None], 0)[0]
             else:
-                kstar = jnp.zeros(B, jnp.int32)
+                kstar = jnp.zeros((Lp, B), jnp.int32)
                 pd, pdslope, pdq = V[0], S[0], Q[0]
         else:
-            V, S = _eval_slope_right(C, tC)                     # (nC, B)
+            V = _gather(C[1], iC) + slC * uC                        # (nC,Lp,B)
+            S = slC
             if nC > 1:
                 kstar = jnp.argmin(V, 0)
                 pd = jnp.take_along_axis(V, kstar[None], 0)[0]
                 pdslope = jnp.take_along_axis(S, kstar[None], 0)[0]
             else:
-                kstar = jnp.zeros(B, jnp.int32)
+                kstar = jnp.zeros((Lp, B), jnp.int32)
                 pd, pdslope = V[0], S[0]
-        tb_ceil = _next_break(C, tC).min(0)
+        tb_ceil = nbC.min(0)
 
         # ---- resource caps and next requirement breakpoints ----------------
-        if L:
-            tL = jnp.broadcast_to(t, (L, B))
-            if ramps:
-                r_now, r_sl = _eval_slope_right(IRs, tL)        # (L, B)
-            else:
-                r_now = _eval_right(IRs, tL)                    # (L, B)
-            tb_ir = _next_break(IRs, tL).min(0)
-            # searchsorted(rb, p + ptol, "right") - 1, per resource row
-            ri = jnp.maximum((rbs <= (p[None, :, None] + ptol)).sum(-1) - 1, 0)
-            cl = _gather(jnp.broadcast_to(rc1s, (L, B, n_rb)), ri)
+        # the cap query and (when bursts exist) the antiderivative value
+        # share the resource piece index: antiderivatives keep their rate's
+        # piece starts, so one _locate serves r_now, tb_ir AND A(t)
+        if Lr:
+            tL = jnp.broadcast_to(t, (Lr, Lp, B))
+            iL, nbL = _locate(IR, tL)
+            uL = tL - _gather(IR[0], iL)
+            r_sl = _gather(IR[2], iL)
+            r_now = _gather(IR[1], iL) + r_sl * uL
+            tb_ir = nbL.min(0)
+            ri = jnp.maximum((rbs <= (p + ptol)[None, :, :, None]).sum(-1) - 1,
+                             0)                                     # (Lr,Lp,B)
+            cl = _gather(rc1s, ri)
             caps = jnp.where(cl > 0, r_now / jnp.where(cl > 0, cl, 1.0), _INF)
             if ramps:
-                caps1 = jnp.where(cl > 0, r_sl / jnp.where(cl > 0, cl, 1.0), 0.0)
+                caps1 = jnp.where(cl > 0, r_sl / jnp.where(cl > 0, cl, 1.0),
+                                  0.0)
+            pp = p[None, :, :, None]
             if has_jumps:
-                cond_bp = ((rbs >= p[None, :, None] - ptol) & ~absorbed
-                           & ((jumpss > 0) | (rbs > p[None, :, None] + ptol)))
+                cond_bp = ((rbs >= pp - ptol[None, :, :, None]) & ~absorbed
+                           & ((jumpss > 0) | (rbs > pp + ptol[None, :, :, None])))
             else:  # no jumps: nothing is ever absorbed, zero-jump rule only
-                cond_bp = (rbs >= p[None, :, None] - ptol) \
-                    & (rbs > p[None, :, None] + ptol)
+                cond_bp = (rbs >= pp - ptol[None, :, :, None]) \
+                    & (rbs > pp + ptol[None, :, :, None])
             has = cond_bp.any(-1)
-            pbidx = jnp.argmax(cond_bp, -1)                     # (L, B)
+            pbidx = jnp.argmax(cond_bp, -1)                         # (Lr,Lp,B)
             pb = jnp.where(has,
-                           _gather(jnp.broadcast_to(rbs, (L, B, n_rb)), pbidx),
+                           _gather(jnp.broadcast_to(rbs, (Lr, Lp, B, n_rb)),
+                                   pbidx),
                            _INF)
-            if L > 1 and ramps:
+            if Lr > 1 and ramps:
                 smin = caps.min(0)
                 # value ties break on the cap derivative (falling cap wins)
                 smin_s = jnp.where(jnp.isfinite(smin), smin, 1.0)
@@ -499,30 +581,29 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int,
                 smin1 = jnp.where(jnp.isfinite(smin),
                                   jnp.take_along_axis(caps1, lstar[None], 0)[0],
                                   0.0)
-            elif L > 1:
+            elif Lr > 1:
                 smin = caps.min(0)
                 lstar = caps.argmin(0)
             else:
                 smin = caps[0]
-                lstar = jnp.zeros(B, jnp.int32)
+                lstar = jnp.zeros((Lp, B), jnp.int32)
                 if ramps:
                     smin1 = jnp.where(jnp.isfinite(smin), caps1[0], 0.0)
             if has_jumps:
                 pjump = jnp.where(
-                    has, _gather(jnp.broadcast_to(jumpss, (L, B, n_rb)), pbidx),
-                    0.0)
+                    has, _gather(jumpss, pbidx), 0.0)
         else:
-            tb_ir = jnp.full(B, _INF)
-            smin = jnp.full(B, _INF)
-            smin1 = jnp.zeros(B)
-            lstar = jnp.zeros(B, kstar.dtype)
-            pb = jnp.zeros((0, B))
+            tb_ir = jnp.full((Lp, B), _INF)
+            smin = jnp.full((Lp, B), _INF)
+            smin1 = jnp.zeros((Lp, B))
+            lstar = jnp.zeros((Lp, B), kstar.dtype)
+            pb = jnp.zeros((0, Lp, B))
 
         # ---- unconstrained: jump instantly toward the data ceiling ---------
         uncon = act & ~jnp.isfinite(smin) & (p < pd - jtol)
         if has_jumps:
-            blk = jnp.where((pjump > 0) & (pb > p[None] + jtol)
-                            & (pb <= pd[None] + jtol), pb, _INF)
+            blk = jnp.where((pjump > 0) & (pb > p[None] + jtol[None])
+                            & (pb <= pd[None] + jtol[None]), pb, _INF)
             blk_pb = blk.min(0)
             target = jnp.where(jnp.isfinite(blk_pb), blk_pb, pd)
             p = jnp.where(uncon, target, p)
@@ -536,20 +617,26 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int,
 
         # ---- burst-resource stall: absorb jumps pinned at p ----------------
         if has_jumps:
-            pinned = act[None] & (pjump > 0) & (jnp.abs(pb - p[None]) <= ptol)
-            need = _eval_right(As, tL) + pjump
-            te = _first_at_or_above(As, need, tL)
+            pinned = act[None] & (pjump > 0) & (jnp.abs(pb - p[None])
+                                                <= ptol[None])
+            uA = tL - _gather(As[0], iL)        # same pieces as the rate
+            a_now = _gather(As[1], iL) + _gather(As[2], iL) * uA
+            if ramps:
+                a_now = a_now + _gather(As[3], iL) * uA * uA
+            need = a_now + pjump
+            te = _first_at_or_above(As, need, tL, plen=A_plen)
             te = jnp.where(pinned, te, -_INF)
             stall_end = te.max(0)
             # ties keep the first resource (argmax returns the first max)
-            stall_attr = (K + jnp.argmax(te, 0)).astype(jnp.int32)
+            stall_attr = (nC + jnp.argmax(te, 0)).astype(jnp.int32)
             absorbed = absorbed | (pinned[..., None]
-                                   & (jnp.arange(n_rb)[None, None]
+                                   & (jnp.arange(n_rb)[None, None, None]
                                       == pbidx[..., None]))
             stalled = act & (stall_end > -_INF)
             rec0 = (jnp.where(stalled, t, 0.0), jnp.where(stalled, p, 0.0),
-                    jnp.zeros(B), jnp.where(stalled, stall_attr, -1), stalled,
-                    jnp.zeros(B) if ramps else None)
+                    jnp.zeros((Lp, B)),
+                    jnp.where(stalled, stall_attr, -1).astype(jnp.float64),
+                    stalled.astype(jnp.float64))
             dead = stalled & ~jnp.isfinite(stall_end)
             active = active & ~dead
             t = jnp.where(stalled & jnp.isfinite(stall_end), stall_end, t)
@@ -578,7 +665,7 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int,
         if ramps:
             qmov = jnp.where(data_lim, pdq,
                              jnp.where(jnp.isfinite(smin), 0.5 * smin1, 0.0))
-        attr = jnp.where(data_lim, kstar, K + lstar).astype(jnp.int32)
+        attr = jnp.where(data_lim, kstar, nC + lstar).astype(jnp.int32)
 
         events = jnp.stack([tb_ceil, tb_ir])
         if nC > 1:  # ceiling argmin crossover (impossible with one ceiling)
@@ -592,7 +679,7 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int,
                                _INF)
                 ux = jnp.where(ux > TIME_TOL, ux, _INF)
             events = jnp.concatenate([events, t[None] + ux])
-        if L:
+        if Lr:
             if ramps:
                 upb = _first_pos_root(qmov[None], slope[None],
                                       jnp.where(jnp.isfinite(pb),
@@ -620,7 +707,7 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int,
                                _INF)
             ucatch = jnp.where(ucatch > TIME_TOL, ucatch, _INF)
         events = jnp.concatenate([events, (t + ucatch)[None]])
-        if ramps and L:
+        if ramps and Lr:
             # governor change: a time-varying cap undercuts the current rate
             # bound — the ceiling slope when data-limited, the minimum cap
             # when resource-limited (cap crossover); linear-in-time crossing
@@ -645,8 +732,12 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int,
 
         # movement record captures the pre-advance state
         rec1 = (jnp.where(act, t, 0.0), jnp.where(act, p, 0.0),
-                jnp.where(act, slope, 0.0), jnp.where(act, attr, -1), act,
-                jnp.where(act, qmov, 0.0) if ramps else None)
+                jnp.where(act, slope, 0.0),
+                jnp.where(act, attr, -1).astype(jnp.float64),
+                act.astype(jnp.float64))
+        if ramps:
+            rec0 = rec0 + (jnp.zeros((Lp, B)),) if rec0 is not None else None
+            rec1 = rec1 + (jnp.where(act, qmov, 0.0),)
 
         done = act & jnp.isfinite(t_fin) & (t_fin <= t_next + TIME_TOL)
         finish = jnp.where(done, t_fin, finish)
@@ -656,7 +747,7 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int,
         active = active & ~stuck
         adv = cont & ~stuck
         t_safe = jnp.where(jnp.isfinite(t_next), t_next, t)
-        pd_left = _eval_left(C, jnp.broadcast_to(t_safe, (nC, B))).min(0)
+        pd_left = _eval_left(C, jnp.broadcast_to(t_safe, (nC, Lp, B))).min(0)
         du = t_safe - t
         if ramps:
             p_new = jnp.minimum(p + (slope + qmov * du) * du, pd_left)
@@ -665,67 +756,76 @@ def _solve_proc(ps: _ProcSpec, ceils, IR, t0, B: int, iter_cap: int,
         p = jnp.where(adv, jnp.maximum(p, p_new), p)
         t = jnp.where(adv, t_safe, t)
 
-        # record slots for this iteration, written as one (B, spi) block each
-        def upd(buf, a, b):
-            block = (jnp.stack([a, b], 1) if b is not None
-                     else a[:, None]).astype(buf.dtype)
-            return lax.dynamic_update_slice(
-                buf, block, (jnp.zeros((), it.dtype), spi * it))
+        # ONE record scatter per iteration: all buffers (and, with bursts,
+        # both slots) land as a single (nbuf, Lp, B, spi) block write
+        rec1v = jnp.stack(rec1)                             # (nbuf, Lp, B)
+        if has_jumps:
+            block = jnp.stack([jnp.stack(rec0), rec1v], -1)
+        else:
+            block = rec1v[..., None]
+        z = jnp.zeros((), it.dtype)
+        rec = lax.dynamic_update_slice(st["rec"], block, (z, z, z, spi * it))
 
-        r0 = rec0 or (None,) * 6
-        recT = upd(st["recT"], *((r0[0], rec1[0]) if has_jumps
-                                 else (rec1[0], None)))
-        recC0 = upd(st["recC0"], *((r0[1], rec1[1]) if has_jumps
-                                   else (rec1[1], None)))
-        recC1 = upd(st["recC1"], *((r0[2], rec1[2]) if has_jumps
-                                   else (rec1[2], None)))
-        recA = upd(st["recA"], *((r0[3], rec1[3]) if has_jumps
-                                 else (rec1[3], None)))
-        recM = upd(st["recM"], *((r0[4], rec1[4]) if has_jumps
-                                 else (rec1[4], None)))
-
-        out = {"it": it + 1, "t": t, "p": p, "finish": finish,
-               "active": active, "absorbed": absorbed, "recT": recT,
-               "recC0": recC0, "recC1": recC1, "recA": recA, "recM": recM}
-        if ramps:
-            out["recC2"] = upd(st["recC2"], *((r0[5], rec1[5]) if has_jumps
-                                              else (rec1[5], None)))
-        return out
+        return {"it": it + 1, "t": t, "p": p, "finish": finish,
+                "active": active, "absorbed": absorbed, "rec": rec}
 
     init = {
         "it": jnp.zeros((), jnp.int32),
         "t": t0.astype(jnp.float64),
-        "p": jnp.zeros(B),
-        "finish": jnp.full(B, _INF),
-        "active": jnp.ones(B, bool),
-        "absorbed": (jnp.zeros((max(L, 1), B, n_rb), bool) if has_jumps
-                     else jnp.zeros((1, 1, 1), bool)),
-        "recT": jnp.zeros((B, R)),
-        "recC0": jnp.zeros((B, R)),
-        "recC1": jnp.zeros((B, R)),
-        "recA": jnp.full((B, R), -1, jnp.int32),
-        "recM": jnp.zeros((B, R), bool),
+        "p": jnp.zeros((Lp, B)),
+        "finish": jnp.full((Lp, B), _INF),
+        "active": jnp.ones((Lp, B), bool),
+        "absorbed": (jnp.zeros((max(Lr, 1), Lp, B, n_rb), bool) if has_jumps
+                     else jnp.zeros((1, 1, 1, 1), bool)),
+        "rec": jnp.zeros((nbuf, Lp, B, R)),
     }
-    if ramps:
-        init["recC2"] = jnp.zeros((B, R))
     st = lax.while_loop(cond, body, init)
 
     p, t, finish, active = st["p"], st["t"], st["finish"], st["active"]
     late = active & (p >= p_end - ftol) & ~jnp.isfinite(finish)
     finish = jnp.where(late, t, finish)
     overflow = jnp.any(active & (p < p_end - ftol))
-    progress = _assemble_progress(st["recT"], st["recC0"], st["recC1"],
-                                  st["recM"], t0, finish, p_end, B, R,
-                                  C2=st.get("recC2"))
-    share = _aggregate_shares(st["recT"], st["recA"], st["recM"], finish,
-                              K + L, B, R)
-    return {"finish": finish, "progress": progress, "share": share,
+    rec = st["rec"]
+    share = _aggregate_shares(rec[0], rec[3].astype(jnp.int32), rec[4] > 0.5,
+                              finish, nC + Lr, R)
+    # progress assembly happens in the runner: levels whose progress feeds
+    # no later level join ONE deferred stacked assembly pass at the end
+    return {"finish": finish, "rec": rec, "share": share,
             "iterations": st["it"], "overflow": overflow}
 
 
-def _assemble_progress(T, C0, C1, M, t0, finish, p_end, B: int, R: int,
-                       C2=None):
-    """engine._assemble_progress with a static piece budget ``P = R + 1``.
+def _suffix_min(a):
+    """Suffix cumulative minimum along the last axis via log-step shifted
+    minima.  ``lax.cummin`` lowers to ``reduce-window`` on XLA CPU — an
+    O(R²) window scan costing ~100us per call at these shapes — while this
+    unrolls to ceil(log2 R) elementwise ``minimum`` ops that fuse."""
+    R = a.shape[-1]
+    big = jnp.asarray(np.iinfo(np.int64).max if jnp.issubdtype(a.dtype, jnp.integer)
+                      else _INF, a.dtype)
+    k = 1
+    while k < R:
+        shifted = jnp.concatenate(
+            [a[..., k:], jnp.full(a.shape[:-1] + (k,), big, a.dtype)], -1)
+        a = jnp.minimum(a, shifted)
+        k *= 2
+    return a
+
+
+def _suffix_or(m):
+    """Suffix cumulative OR along the last axis (log-step, fusible)."""
+    R = m.shape[-1]
+    k = 1
+    while k < R:
+        shifted = jnp.concatenate(
+            [m[..., k:], jnp.zeros(m.shape[:-1] + (k,), m.dtype)], -1)
+        m = m | shifted
+        k *= 2
+    return m
+
+
+def _assemble_progress(T, C0, C1, M, t0, finish, p_end, R: int, C2=None):
+    """engine._assemble_progress with a static piece budget ``P = R + 1``,
+    generalized over leading batch dims (here ``(Lp, B)``).
 
     Instead of compacting valid pieces to the front (a stable sort — slow in
     XLA on CPU), every invalid slot is backward-filled with the NEXT valid
@@ -737,60 +837,65 @@ def _assemble_progress(T, C0, C1, M, t0, finish, p_end, B: int, R: int,
     piece is appended as column R; rows that never record and never finish
     anchor the domain at ``t0``.
     """
-    M = M & (T < finish[:, None] - TIME_TOL)
+    lead = finish.shape
+    ax = len(lead)
+    M = M & (T < finish[..., None] - TIME_TOL)
     has_fin = jnp.isfinite(finish)
-    S = jnp.concatenate([T, jnp.where(has_fin, finish, PAD_START)[:, None]], 1)
-    C0x = jnp.concatenate([C0, jnp.where(has_fin, p_end, 0.0)[:, None]], 1)
-    C1x = jnp.concatenate([C1, jnp.zeros((B, 1))], 1)
-    Mx = jnp.concatenate([M, has_fin[:, None]], 1)
+    pe = jnp.broadcast_to(p_end, lead)
+    S = jnp.concatenate([T, jnp.where(has_fin, finish, PAD_START)[..., None]],
+                        -1)
+    C0x = jnp.concatenate([C0, jnp.where(has_fin, pe, 0.0)[..., None]], -1)
+    C1x = jnp.concatenate([C1, jnp.zeros(lead + (1,))], -1)
+    Mx = jnp.concatenate([M, has_fin[..., None]], -1)
     # "fill each slot from the nearest valid slot at/after it" as a suffix
     # cumulative-min over masked column indices (no sequential scan)
     P1 = R + 1
-    idx = jnp.where(Mx, jnp.arange(P1)[None, :], P1)
-    nxt = jnp.flip(lax.cummin(jnp.flip(idx, 1), axis=1), 1)      # (B, P1)
+    idx = jnp.where(Mx, jnp.arange(P1), P1)
+    nxt = _suffix_min(idx)
     grab = lambda a, fill: jnp.take_along_axis(  # noqa: E731
-        jnp.concatenate([a, jnp.full((B, 1), fill)], 1), nxt, 1)
+        jnp.concatenate([a, jnp.full(lead + (1,), fill)], -1), nxt, -1)
     Sf = grab(S, PAD_START)
     C0f = grab(C0x, 0.0)
     C1f = grab(C1x, 0.0)
-    empty = ~Mx.any(1)
-    Sf = Sf.at[:, 0].set(jnp.where(empty, t0, Sf[:, 0]))
+    empty = ~Mx.any(-1)
+    Sf = Sf.at[..., 0].set(jnp.where(empty, t0, Sf[..., 0]))
     if C2 is not None:
-        C2f = grab(jnp.concatenate([C2, jnp.zeros((B, 1))], 1), 0.0)
+        C2f = grab(jnp.concatenate([C2, jnp.zeros(lead + (1,))], -1), 0.0)
         return (Sf, C0f, C1f, C2f)
     return (Sf, C0f, C1f)
 
 
-def _aggregate_shares(T, ATTR, M, finish, n_factors: int, B: int, R: int):
+def _aggregate_shares(T, ATTR, M, finish, n_factors: int, R: int):
     """engine._aggregate_shares with the backward column loops replaced by
-    suffix cumulative reductions (record starts are non-decreasing)."""
+    suffix cumulative reductions (record starts are non-decreasing),
+    generalized over leading batch dims."""
+    lead = finish.shape
+    ax = len(lead)
     if n_factors == 0:
-        return jnp.zeros((B, 0))
-    sufmin = lambda a: jnp.flip(lax.cummin(jnp.flip(a, 1), axis=1), 1)  # noqa: E731
+        return jnp.zeros(lead + (0,))
     # piece ends: the next valid piece's start (INF when none — clipped by
     # the effective finish below)
-    idx = jnp.where(M, jnp.arange(R)[None, :], R)
-    nxt = sufmin(jnp.concatenate([idx[:, 1:], jnp.full((B, 1), R)], 1))
+    idx = jnp.where(M, jnp.arange(R), R)
+    nxt = _suffix_min(jnp.concatenate([idx[..., 1:],
+                                       jnp.full(lead + (1,), R)], -1))
     ends_src = jnp.concatenate([jnp.where(M, T, _INF),
-                                jnp.full((B, 1), _INF)], 1)
-    ends = jnp.where(M, jnp.take_along_axis(ends_src, nxt, 1), 0.0)
+                                jnp.full(lead + (1,), _INF)], -1)
+    ends = jnp.where(M, jnp.take_along_axis(ends_src, nxt, -1), 0.0)
     # effective finish for never-finishing rows: the START of the trailing
     # equal-attribution run of valid pieces (see the numpy twin)
-    seen = M.any(1)
-    last_idx = jnp.where(M, jnp.arange(R)[None, :], -1).max(1)
+    seen = M.any(-1)
+    last_idx = jnp.where(M, jnp.arange(R), -1).max(-1)
     last_attr = _gather(ATTR, jnp.maximum(last_idx, 0))
-    bad = M & (ATTR != last_attr[:, None])
-    suf_bad = jnp.flip(lax.cummax(jnp.flip(bad, 1).astype(jnp.int8),
-                                  axis=1), 1).astype(bool)
-    in_run = M & ~suf_bad
-    run_start = jnp.where(in_run, T, _INF).min(1)
+    bad = M & (ATTR != last_attr[..., None])
+    in_run = M & ~_suffix_or(bad)
+    run_start = jnp.where(in_run, T, _INF).min(-1)
     fin_shares = jnp.where(jnp.isfinite(finish), finish,
                            jnp.where(seen & jnp.isfinite(run_start),
                                      run_start, 0.0))
-    span = jnp.clip(jnp.minimum(ends, fin_shares[:, None]) - T, 0.0, None)
+    span = jnp.clip(jnp.minimum(ends, fin_shares[..., None]) - T, 0.0, None)
     span = jnp.where(M, span, 0.0)
-    onehot = ATTR[:, :, None] == jnp.arange(n_factors, dtype=jnp.int32)[None, None]
-    return (span[:, :, None] * onehot).sum(1)
+    onehot = ATTR[..., None] == jnp.arange(n_factors, dtype=jnp.int32)
+    return (span[..., None] * onehot).sum(ax)
 
 
 # ---------------------------------------------------------------------------
@@ -804,28 +909,87 @@ def _bcast(fn, B: int):
     return tuple(jnp.broadcast_to(a, (B, P)) for a in fn)
 
 
-def _pad_args(args: dict, B: int, Bp: int) -> dict:
-    """Pad every full-batch (B, P) tuple to Bp rows by replicating the last
-    scenario (single-row broadcast tuples are left alone)."""
-    def pad(tr):
-        if np.asarray(tr[0]).shape[0] != B:
-            return tr  # single-row broadcast: replicated per device later
-        return tuple(np.concatenate([a, np.repeat(a[-1:], Bp - B, 0)], 0)
-                     for a in (np.asarray(x) for x in tr))
+def _stack_level_ceils(per, nC: int, B: int, arity: int):
+    """Stack per-process ceiling-tuple lists into one ``(nC, Lp, B, Pmax)``
+    tuple, padding missing slots with the inert far-above ceiling."""
+    Pm = max(tr[0].shape[-1] for cl in per for tr in cl)
+    pad_slot = None
 
-    return {proc: {grp: {k: pad(tr) for k, tr in grp_args.items()}
-                   for grp, grp_args in proc_args.items()}
-            for proc, proc_args in args.items()}
+    def padded(tr):
+        tr = tuple(tr)
+        if len(tr) < arity:
+            tr = tr + tuple(jnp.zeros(tr[0].shape)
+                            for _ in range(arity - len(tr)))
+        out = []
+        for k, a in enumerate(tr):
+            a = jnp.broadcast_to(a, (B, a.shape[-1]))
+            extra = Pm - a.shape[-1]
+            if extra:
+                fill = PAD_START if k == 0 else 0.0
+                a = jnp.concatenate([a, jnp.full((B, extra), fill)], -1)
+            out.append(a)
+        return out
+
+    rows = []
+    for cl in per:
+        cl = [padded(tr) for tr in cl]
+        while len(cl) < nC:
+            if pad_slot is None:
+                s = jnp.concatenate(
+                    [jnp.zeros((B, 1)), jnp.full((B, Pm - 1), PAD_START)], -1)
+                c0 = jnp.concatenate(
+                    [jnp.full((B, 1), _PAD_CEIL), jnp.zeros((B, Pm - 1))], -1)
+                z = jnp.zeros((B, Pm))
+                pad_slot = [s, c0, z] + [z] * (arity - 3)
+            cl.append(pad_slot)
+        rows.append(cl)
+    Lp = len(per)
+    return tuple(
+        jnp.stack([jnp.stack([rows[pi][ci][k] for pi in range(Lp)])
+                   for ci in range(nC)])
+        for k in range(arity))
+
+
+_ZERO_FN = (np.zeros((1, 1)), np.zeros((1, 1)), np.zeros((1, 1)))
+
+
+def _np_pad_stack(slots, arity: int):
+    """Host-side twin of the in-trace stacking: ``slots[n][pi]`` numpy
+    tuples -> ``(n, Lp, rows, Pmax)`` arrays with ``rows in (1, B)``
+    (1 only when every constituent is a single-row broadcast)."""
+    Pm = max(tr[0].shape[-1] for row in slots for tr in row)
+    rows_B = max(tr[0].shape[0] for row in slots for tr in row)
+    out = []
+    for k in range(arity):
+        mats = []
+        for row in slots:
+            per = []
+            for tr in row:
+                a = (np.asarray(tr[k], np.float64) if k < len(tr)
+                     else np.zeros_like(np.asarray(tr[0], np.float64)))
+                if a.shape[0] != rows_B:
+                    a = np.broadcast_to(a, (rows_B, a.shape[-1]))
+                extra = Pm - a.shape[-1]
+                if extra:
+                    fill = PAD_START if k == 0 else 0.0
+                    a = np.concatenate(
+                        [a, np.full((a.shape[0], extra), fill)], -1)
+                per.append(a)
+            mats.append(np.stack(per))
+        out.append(np.stack(mats))
+    return tuple(out)
 
 
 class JaxSweepEngine:
-    """Compiled lockstep solver for one :class:`CompiledWorkflow`.
+    """Compiled level-fused lockstep solver for one :class:`CompiledWorkflow`.
 
     One instance per plan; jitted executables are cached per
-    ``(B, shards, iter_cap)``.  ``solve`` takes the per-process input arrays
-    a :class:`~repro.analysis.pack.ScenarioPack` prepared — numpy
-    ``(rows, P)`` triples with ``rows in (1, B)`` (single-row triples
-    broadcast inside the trace) — and returns the same
+    ``(B, shards, iter_cap, ramps)`` — the workflow-side compile key is the
+    level signature baked into :class:`_WorkflowSpec`.  ``solve`` takes the
+    per-process input arrays a :class:`~repro.analysis.pack.ScenarioPack`
+    prepared (``pack.host_args``) — numpy ``(rows, P)`` triples with
+    ``rows in (1, B)`` — stacks them by topology level host-side
+    (:meth:`level_args`), and returns the same
     :class:`~repro.sweep.engine.BatchProcResult` mapping the numpy engine
     produces.
     """
@@ -842,35 +1006,105 @@ class JaxSweepEngine:
     # -- trace construction -------------------------------------------------
     def _make_run(self, B: int, iter_cap: int, ramps: bool):
         spec = self.spec
+        arity = 4 if ramps else 3
 
-        def run(args):
+        def run(largs):
             finish_by, progress_by, out = {}, {}, {}
+            solved = []                 # (level, t0, result) in level order
             overflow = jnp.zeros((), bool)
-            for ps in spec.procs:
-                t0 = jnp.zeros(B)
-                for g in ps.gate_names:
-                    t0 = jnp.maximum(t0, finish_by[g])
-                a = args[ps.name]
-                ceils = []
-                for dep in ps.data_names:
-                    if dep in ps.edges:
-                        src, out_fn = ps.edges[dep]
-                        inner = _compose(out_fn, progress_by[src], B)
-                        ceils.append(_compose(ps.reqs[dep], inner, B))
-                    elif dep in a.get("ceil", {}):
-                        ceils.append(_bcast(a["ceil"][dep], B))
-                    else:
-                        ceils.append(_compose(ps.reqs[dep],
-                                              _bcast(a["data"][dep], B), B))
-                if not ceils:
-                    ceils = [(t0[:, None], jnp.full((B, 1), ps.p_end),
-                              jnp.zeros((B, 1)))]
-                IR = [_bcast(a["res"][r], B) for r in ps.res_names]
-                res = _solve_proc(ps, ceils, IR, t0, B, iter_cap, ramps)
-                finish_by[ps.name] = res["finish"]
-                progress_by[ps.name] = res["progress"]
-                overflow = overflow | res.pop("overflow")
-                out[ps.name] = res
+            for ls, la in zip(spec.levels, largs):
+                Lp = len(ls.procs)
+                rows = []
+                for ps in ls.procs:
+                    t0p = jnp.zeros(B)
+                    for g in ps.gate_names:
+                        t0p = jnp.maximum(t0p, finish_by[g])
+                    rows.append(t0p)
+                t0 = jnp.stack(rows) if Lp > 1 else rows[0][None]
+                if la["C"] is not None:   # fully static level, pre-stacked
+                    C = tuple(jnp.broadcast_to(jnp.asarray(a),
+                                               (ls.nC, Lp, B, a.shape[-1]))
+                              for a in la["C"])
+                else:
+                    per = []
+                    for pi, ps in enumerate(ls.procs):
+                        cl = []
+                        for dep in ps.data_names:
+                            if dep in ps.edges:
+                                src, out_fn = ps.edges[dep]
+                                inner = _compose(out_fn, progress_by[src], B)
+                                cl.append(_compose(ps.reqs[dep], inner, B))
+                            else:
+                                cl.append(_bcast(la["ceil"][f"{pi}.{dep}"], B))
+                        if not cl:
+                            cl = [(jnp.zeros((B, 1)),
+                                   jnp.full((B, 1), ps.p_end),
+                                   jnp.zeros((B, 1)))]
+                        per.append(cl)
+                    C = _stack_level_ceils(per, ls.nC, B, arity)
+                IR = (tuple(jnp.broadcast_to(jnp.asarray(a),
+                                             (ls.Lr, Lp, B, a.shape[-1]))
+                            for a in la["IR"])
+                      if ls.Lr else None)
+                res = _solve_level(ls, C, IR, t0, B, iter_cap, ramps)
+                overflow = overflow | res["overflow"]
+                solved.append((ls, t0, res))
+                for pi, ps in enumerate(ls.procs):
+                    finish_by[ps.name] = res["finish"][pi]
+                if ls.progress_inline:  # a later level composes against it
+                    rec = res["rec"]
+                    prog = _assemble_progress(
+                        rec[0], rec[1], rec[2], rec[4] > 0.5, t0,
+                        res["finish"], jnp.asarray(ls.p_end),
+                        rec.shape[-1], C2=rec[5] if ramps else None)
+                    for pi, ps in enumerate(ls.procs):
+                        progress_by[ps.name] = tuple(a[pi] for a in prog)
+
+            # ---- deferred progress: ONE stacked assembly over the levels no
+            # later level composes against (dispatch cost is per op, so the
+            # terminal levels share a single padded pass)
+            deferred = [(ls, t0, res) for (ls, t0, res) in solved
+                        if not ls.progress_inline]
+            if deferred:
+                Rd = max(res["rec"].shape[-1] for (_ls, _t0, res) in deferred)
+
+                def padR(a, target):
+                    extra = target - a.shape[-1]
+                    if not extra:
+                        return a
+                    return jnp.concatenate(
+                        [a, jnp.full(a.shape[:-1] + (extra,), 0.0, a.dtype)],
+                        -1)
+
+                dcat = lambda k: jnp.concatenate(  # noqa: E731
+                    [padR(res["rec"][k], Rd)
+                     for (_ls, _t0, res) in deferred], 0)
+                prog = _assemble_progress(
+                    dcat(0), dcat(1), dcat(2), dcat(4) > 0.5,
+                    jnp.concatenate([t0 for (_ls, t0, _r) in deferred], 0),
+                    jnp.concatenate([res["finish"]
+                                     for (_ls, _t0, res) in deferred], 0),
+                    jnp.asarray(np.concatenate(
+                        [ls.p_end for (ls, _t0, _r) in deferred], 0)),
+                    Rd, C2=dcat(5) if ramps else None)
+                row = 0
+                for ls, _t0, _res in deferred:
+                    for pi, ps in enumerate(ls.procs):
+                        progress_by[ps.name] = tuple(a[row + pi]
+                                                     for a in prog)
+                    row += len(ls.procs)
+
+            for ls, _t0, res in solved:
+                for pi, ps in enumerate(ls.procs):
+                    K, L = len(ps.data_names), len(ps.res_names)
+                    cols = np.array(list(range(K))
+                                    + list(range(ls.nC, ls.nC + L)), np.int32)
+                    out[ps.name] = {
+                        "finish": res["finish"][pi],
+                        "progress": progress_by[ps.name],
+                        "share": res["share"][pi][:, cols],
+                        "iterations": res["iterations"],
+                    }
             out["__overflow__"] = overflow
             return out
 
@@ -891,26 +1125,94 @@ class JaxSweepEngine:
         return self._compiled[key]
 
     # -- host-side argument marshalling ------------------------------------
-    def device_args(self, args_np: dict, B: int, shards: int = 1) -> dict:
-        """Numpy tuples -> device pytree (reshaped ``(D, B/D, P)`` when
-        sharded; single-row broadcast tuples are replicated per device).
+    def level_args(self, args_np: dict, B: int, ramps: bool) -> list:
+        """Group per-process packed inputs by topology level (host-side,
+        numpy): resource inputs stack to ``(Lr, Lp, rows, P)``, and for
+        edge-free levels the data ceilings are fully pre-composed
+        (``compose_scalar``) and pre-stacked to ``(nC, Lp, rows, P)`` — so
+        the compiled program re-runs NO loop-invariant composition ops.
+        Levels with edge-fed deps keep their static slots pre-composed per
+        process (``"ceil"``) and compose only the edges in-trace.
+        """
+        arity = 4 if ramps else 3
+        largs = []
+        for ls in self.spec.levels:
+            la: dict = {"C": None, "IR": None, "ceil": {}}
+            if ls.Lr:
+                slots = []
+                for li in range(ls.Lr):
+                    row = []
+                    for ps in ls.procs:
+                        if li < len(ps.res_names):
+                            row.append(
+                                args_np[ps.name]["res"][ps.res_names[li]])
+                        else:
+                            row.append(_ZERO_FN)
+                    slots.append(row)
+                la["IR"] = _np_pad_stack(slots, arity=3)
+            static_slots: dict[tuple[int, str], tuple] = {}
+            for pi, ps in enumerate(ls.procs):
+                a = args_np[ps.name]
+                for dep in ps.data_names:
+                    if dep in ps.edges:
+                        continue
+                    if dep in a.get("ceil", {}):
+                        static_slots[(pi, dep)] = a["ceil"][dep]
+                    else:
+                        tr = a["data"][dep]
+                        inner = BPL(*(np.asarray(x, np.float64) for x in tr))
+                        static_slots[(pi, dep)] = compose_scalar(
+                            ps.req_fns[dep], inner).arrays()
+            if ls.static_ceils:
+                per = []
+                for pi, ps in enumerate(ls.procs):
+                    cl = [static_slots[(pi, dep)] for dep in ps.data_names]
+                    if not cl:
+                        cl = [(np.zeros((1, 1)), np.full((1, 1), ps.p_end),
+                               np.zeros((1, 1)))]
+                    while len(cl) < ls.nC:
+                        cl.append((np.zeros((1, 1)),
+                                   np.full((1, 1), _PAD_CEIL),
+                                   np.zeros((1, 1))))
+                    per.append(cl)
+                la["C"] = _np_pad_stack([[per[pi][ci] for pi in range(len(per))]
+                                         for ci in range(ls.nC)], arity=arity)
+            else:
+                la["ceil"] = {f"{pi}.{dep}": tr
+                              for (pi, dep), tr in static_slots.items()}
+            largs.append(la)
+        return largs
+
+    def _pad_level_args(self, largs: list, B: int, Bp: int) -> list:
+        """Pad every full-batch rows axis to Bp by replicating the last
+        scenario (single-row broadcast arrays are left alone)."""
+        def pad(a):
+            a = np.asarray(a)
+            if a.ndim < 2 or a.shape[-2] != B:
+                return a
+            last = a[..., -1:, :]
+            return np.concatenate([a] + [last] * (Bp - B), axis=-2)
+
+        return jax.tree_util.tree_map(pad, largs)
+
+    def device_args(self, largs: list, B: int, shards: int = 1) -> list:
+        """Numpy level pytree -> device pytree (reshaped ``(D, ..., B/D, P)``
+        when sharded; single-row broadcast arrays are replicated per device).
         Quadratic batches ship their ``c2`` plane as a 4th array — the tuple
         arity is part of the pytree structure the trace specializes on."""
-        def put(tr):
-            arrs = tuple(np.asarray(a, np.float64) for a in tr)
+        def put(a):
+            a = np.asarray(a, np.float64)
             if shards > 1:
                 D = shards
-                if arrs[0].shape[0] == 1:
-                    arrs = tuple(np.broadcast_to(a, (D, 1, a.shape[1]))
-                                 for a in arrs)
+                if a.shape[-2] == 1:
+                    a = np.broadcast_to(a, (D,) + a.shape)
                 else:
-                    arrs = tuple(a.reshape(D, B // D, a.shape[1])
-                                 for a in arrs)
-            return tuple(jnp.asarray(a) for a in arrs)
+                    lead = a.shape[:-2]
+                    a = a.reshape(lead + (D, B // D, a.shape[-1]))
+                    a = np.moveaxis(a, -3, 0)
+            return jnp.asarray(a)
 
-        return {proc: {grp: {k: put(tr) for k, tr in grp_args.items()}
-                       for grp, grp_args in proc_args.items()}
-                for proc, proc_args in args_np.items()}
+        return jax.tree_util.tree_map(put, largs)
 
     # -- the public solve ---------------------------------------------------
     def solve(self, args, B: int, *, shards: int = 1,
@@ -921,7 +1223,7 @@ class JaxSweepEngine:
         """Run the compiled sweep; adaptively double the iteration budget on
         overflow (recompiling) up to ``MAX_ITER_CAP``.
 
-        ``ramps`` is the static degree switch (see :func:`_solve_proc`):
+        ``ramps`` is the static degree switch (see :func:`_solve_level`):
         pass True when any packed resource input has a non-zero slope or any
         packed function a quadratic plane — the pack computes this once
         (:attr:`ScenarioPack.ramps`).
@@ -946,12 +1248,15 @@ class JaxSweepEngine:
         else:
             if callable(args):
                 args = args()
+            largs = self.level_args(args, B, ramps)
             if Bp != B:
-                args = _pad_args(args, B, Bp)
-            dev = self.device_args(args, Bp, shards)
+                largs = self._pad_level_args(largs, B, Bp)
+            dev = self.device_args(largs, Bp, shards)
             if cache is not None:
                 cache[key] = dev
-        cap = self._proven_caps.get((Bp, shards, ramps), self.iter_cap)
+        pkey = (Bp, shards, ramps)
+        first = pkey not in self._proven_caps
+        cap = self._proven_caps.get(pkey, self.iter_cap)
         while True:
             fn = self._get_compiled(Bp, shards, cap, ramps)
             out = fn(dev)
@@ -962,7 +1267,18 @@ class JaxSweepEngine:
                 raise UnsupportedScenario(
                     f"jax engine exceeded {MAX_ITER_CAP} lockstep iterations; "
                     "use the numpy backend for this workload")
-        self._proven_caps[(Bp, shards, ramps)] = cap
+        if first:
+            # one-time down-ratchet: the record buffers, progress pieces and
+            # share scans all scale with the iteration budget, so the FIRST
+            # successful solve tightens the proven cap to the actual event
+            # depth (next power of two).  The next same-shape solve pays one
+            # recompile and every re-sweep after runs with tight buffers;
+            # later deeper packs still double back up through the overflow
+            # ladder (the key is set, so no second down-ratchet can thrash).
+            actual = max((int(np.asarray(out[ps.name]["iterations"]).max())
+                          for ps in self.spec.procs), default=1)
+            cap = min(cap, 1 << max(actual - 1, 0).bit_length())
+        self._proven_caps[pkey] = cap
         return self._wrap(out, B, shards, scenario_ids)
 
     def _wrap(self, out, B: int, shards: int,
@@ -1004,3 +1320,70 @@ class JaxSweepEngine:
                 factor_kinds=kinds, factor_names=names, share_seconds=share,
                 iterations=int(np.asarray(r["iterations"]).max()))
         return results
+
+
+# ---------------------------------------------------------------------------
+# trace instrumentation: "cut ops not flops" as a tracked number
+# ---------------------------------------------------------------------------
+
+def _jaxpr_counts(jaxpr) -> tuple[int, int, int]:
+    """``(while_loops, body_eqns, total_eqns)`` of a jaxpr, recursively.
+
+    ``body_eqns`` sums the equation counts inside every ``while`` body —
+    the per-iteration dispatch cost the level-fused engine minimizes;
+    ``total_eqns`` counts every equation at every nesting depth.
+    """
+    try:
+        from jax.extend.core import ClosedJaxpr
+    except ImportError:  # older jax
+        from jax.core import ClosedJaxpr
+
+    def subjaxprs(eqn):
+        for v in eqn.params.values():
+            if isinstance(v, ClosedJaxpr):
+                yield v.jaxpr
+            elif isinstance(v, (list, tuple)):
+                for u in v:
+                    if isinstance(u, ClosedJaxpr):
+                        yield u.jaxpr
+
+    whiles = body = total = 0
+    for eqn in jaxpr.eqns:
+        total += 1
+        if eqn.primitive.name == "while":
+            whiles += 1
+            bw, _bb, bt = _jaxpr_counts(eqn.params["body_jaxpr"].jaxpr)
+            whiles += bw
+            body += bt  # bt already counts nested bodies exactly once
+            total += bt
+            cw, cb, ct = _jaxpr_counts(eqn.params["cond_jaxpr"].jaxpr)
+            total += ct
+        else:
+            for sub in subjaxprs(eqn):
+                sw, sb, stot = _jaxpr_counts(sub)
+                whiles += sw
+                body += sb
+                total += stot
+    return whiles, body, total
+
+
+def trace_report(plan, pack, *, iter_cap: int | None = None) -> dict:
+    """Deterministic op-count report of the compiled re-sweep trace.
+
+    Returns ``while_loops`` (one per topology level), ``body_eqns`` (total
+    jaxpr equations inside the while bodies — the per-iteration dispatch
+    cost), ``total_eqns`` (all equations at any depth) and ``hlo_lines``
+    (unoptimized StableHLO op lines from ``jit(run).lower``).  Everything is
+    machine-independent, so benchmarks can gate on it like a timing.
+    """
+    eng = getattr(plan, "_jax_engine", None) or JaxSweepEngine(plan)
+    B = pack.B_batched
+    largs = eng.level_args(pack.host_args(), B, pack.ramps)
+    cap = iter_cap or eng._proven_caps.get((B, 1, pack.ramps), eng.iter_cap)
+    run = eng._make_run(B, cap, pack.ramps)
+    jaxpr = jax.make_jaxpr(run)(largs)
+    whiles, body, total = _jaxpr_counts(jaxpr.jaxpr)
+    hlo = jax.jit(run).lower(largs).as_text()
+    hlo_lines = sum(1 for ln in hlo.splitlines() if " = " in ln)
+    return {"while_loops": whiles, "body_eqns": body, "total_eqns": total,
+            "hlo_lines": hlo_lines}
