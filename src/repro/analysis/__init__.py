@@ -22,10 +22,14 @@ from .scenarios import (ScenarioSpec, grid, override, ramp_resource,
                         scale_resource, speed_up_data)
 from . import scenarios
 from .plan import CompiledWorkflow, compile_workflow
+from .serve import (AnalysisService, OnlineReanalysis, ServiceStats,
+                    workflow_fingerprint)
 
 __all__ = [
-    "BottleneckFn", "BottleneckInterval", "BottleneckRow", "CompiledWorkflow",
-    "FinishTimes", "Report", "ScenarioPack", "ScenarioSpec", "compile_workflow",
+    "AnalysisService", "BottleneckFn", "BottleneckInterval", "BottleneckRow",
+    "CompiledWorkflow", "FinishTimes", "OnlineReanalysis", "Report",
+    "ScenarioPack", "ScenarioSpec", "ServiceStats", "compile_workflow",
     "derive_bottleneck_fn", "grid", "override", "ramp_resource",
     "report_from_scalar", "scale_resource", "scenarios", "speed_up_data",
+    "workflow_fingerprint",
 ]

@@ -193,13 +193,17 @@ class ScenarioPack:
                                         speed_up_data)
             for i, sc in enumerate(scenarios):
                 (sc.resource_inputs if is_res else sc.data_inputs)[key] = fns[i]
-            for fn in fns:
+            # only replacements aimed at BATCHED scenarios must stay inside
+            # the batched function class — loop-routed scenarios run the
+            # scalar solver, which accepts any PPoly
+            for i in self.bat_idx:
+                fn = fns[i]
                 bad = (not is_batchable_resource(fn)) if is_res \
                     else (not fn.is_piecewise_quadratic)
                 if bad:
                     raise UnsupportedScenario(
-                        f"override for {proc}.{name} leaves the batched "
-                        "function class (resources: non-negative "
+                        f"override for {proc}.{name} (scenario {i}) leaves "
+                        "the batched function class (resources: non-negative "
                         "piecewise-linear rates; data: degree <= 2); use "
                         "plan.prepare() on the new scenario list instead")
             if self.bat_idx:
@@ -237,7 +241,11 @@ def _resolve_override_fns(value, base: PPoly, B: int, is_res: bool,
             return v
         return base * float(v) if is_res else speed_up_data(base, float(v))
 
-    if isinstance(value, PPoly) or np.isscalar(value):
+    # np.isscalar is False for 0-d arrays (np.array(2.0)) and unreliable
+    # across numpy scalar kinds — monitoring feeds hand us exactly those
+    is_scalar = (np.isscalar(value) or isinstance(value, np.generic)
+                 or (isinstance(value, np.ndarray) and value.ndim == 0))
+    if isinstance(value, PPoly) or is_scalar:
         fn = one(value)
         return [fn] * B
     fns = [one(v) for v in value]

@@ -129,6 +129,49 @@ class CompiledWorkflow:
         self._base_report: Report | None = None
         self._bottleneck_fn: BottleneckFn | None = None
         self._jax_engine: Any = None  # lazily-built JaxSweepEngine
+        self._level_sig: tuple | None = None
+
+    # ------------------------------------------------------------------
+    @property
+    def level_signature(self) -> tuple:
+        """Hashable fingerprint of the fused engine's compile key.
+
+        Covers exactly what :class:`repro.sweep.jax_engine._WorkflowSpec`
+        bakes into the trace — the topology levels and, per process, its
+        name, total progress, gates, edge sources with their output
+        functions, requirement functions, and resource-requirement tables.
+        Two plans with equal signatures produce identical XLA traces for
+        every ``(B, shards, iter_cap, ramps)``, so a serving tier
+        (:mod:`repro.analysis.serve`) shares ONE ``JaxSweepEngine`` — and
+        thereby one jit cache — across them; base *input* functions are
+        deliberately excluded (they arrive per pack, not per trace)."""
+        if self._level_sig is None:
+            wf = self.workflow
+
+            def fp(fn: PPoly) -> tuple:
+                return (fn.starts.tobytes(), fn.coeffs.shape,
+                        fn.coeffs.tobytes())
+
+            sig = []
+            for level in self.levels:
+                lsig = []
+                for n in level:
+                    proc = wf.processes[n]
+                    edges = tuple(
+                        (dep, src, out, fp(wf.processes[src].outputs[out]))
+                        for (src, out, dep) in self.edges_in[n])
+                    reqs = tuple((d, fp(dd.requirement))
+                                 for d, dd in proc.data.items())
+                    tables = tuple(
+                        (lab, rb.tobytes(), rc1.tobytes(), jumps.tobytes())
+                        for (lab, rb, rc1, jumps) in self.res_tables[n])
+                    lsig.append((n, float(proc.total_progress),
+                                 tuple(proc.data.keys()),
+                                 tuple(self.gates.get(n, [])),
+                                 edges, reqs, tables))
+                sig.append(tuple(lsig))
+            self._level_sig = tuple(sig)
+        return self._level_sig
 
     # ------------------------------------------------------------------
     # scalar path

@@ -111,6 +111,30 @@ class Report:
             return []
         return [i for i, b in enumerate(self.backends) if b == "loop"]
 
+    def subset(self, indices: "Iterable[int]") -> "Report":
+        """A row-subset copy of a batched report.
+
+        Used by the analysis service to hand each coalesced client exactly
+        its own scenarios out of one fused sweep.  Shares the factor axis
+        with the parent; drops the engine-level ``proc_results`` (drill-down
+        queries re-solve through ``plan``/``scenarios``, which are kept).
+        """
+        if self.is_scalar:
+            raise ValueError("subset() applies to batched (sweep) reports")
+        idx = np.asarray(list(indices), dtype=int)
+        return Report(
+            labels=[self.labels[i] for i in idx],
+            order=list(self.order),
+            makespans=self.makespans[idx],
+            finish=FinishTimes({n: a[idx] for n, a in self.finish.items()}),
+            factors=list(self.factors),
+            share_seconds=self.share_seconds[idx],
+            share_fractions=self.share_fractions[idx],
+            backends=[self.backends[i] for i in idx],
+            plan=self.plan,
+            scenarios=([self.scenarios[i] for i in idx]
+                       if self.scenarios is not None else None))
+
     def summary(self) -> str:
         """Human-readable digest: backend routing (surfacing the
         scalar-fallback rate), makespan spread, and the best scenario."""

@@ -1,0 +1,487 @@
+"""Analysis-as-a-service — one plan, many clients, streaming inputs.
+
+BottleMod's pitch is that re-analysis is nearly free: the model "can be
+repeatedly executed online with an updated state from monitoring"
+(Sect. 7).  This module turns :class:`~repro.analysis.plan.CompiledWorkflow`
+into the front door of an analysis *service* built from three pieces:
+
+* **Plan cache** — :meth:`AnalysisService.compile` keys compiled plans by a
+  full workflow fingerprint, and shares ONE fused
+  :class:`~repro.sweep.jax_engine.JaxSweepEngine` across all plans with the
+  same :attr:`~repro.analysis.plan.CompiledWorkflow.level_signature` (PR 5's
+  compile key) — structurally identical workflows share one XLA trace even
+  when their base input functions differ.
+
+* **Request coalescing** — concurrent clients submit what-if queries
+  (:meth:`AnalysisService.submit` → ``Future[Report]``); a single worker
+  drains the queue and stacks everything aimed at one plan into ONE fused
+  ``(B,)`` sweep.  The lockstep engine is already batched, so a ~3 ms fused
+  call amortized over dozens of queued requests is the throughput play;
+  each client gets back exactly its rows (:meth:`Report.subset`), identical
+  to what a sequential ``plan.sweep`` would have returned.  The stacked
+  batch is padded to a power of two (replicating the last scenario, rows
+  sliced away) so the jit cache sees a handful of shapes instead of one
+  compile per arrival pattern.
+
+* **Online re-analysis** — :meth:`AnalysisService.track` returns an
+  :class:`OnlineReanalysis` that owns a prepared
+  :class:`~repro.analysis.pack.ScenarioPack` and ingests monitoring deltas
+  (measured input rates, :meth:`ProgressMonitor.measured_progress`) through
+  the ``ScenarioPack.override`` delta-re-pack primitive — predictions track
+  the live run without ever re-preparing.
+
+::
+
+    svc = AnalysisService(workflow)              # compiles + caches the plan
+    fut = svc.submit(scenarios.grid({...}))      # coalesced with neighbors
+    fut.result().makespans                       # this client's rows only
+    live = svc.track(sweep_scenarios([0.5]))
+    live.ingest({"dl1.link": measured_rate})     # delta re-pack + re-sweep
+    svc.stats.latency_quantiles()                # (p50, p99) seconds
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.ppoly import PPoly
+from repro.core.workflow import Workflow
+from repro.sweep.batch import Scenario
+
+from .pack import ScenarioPack
+from .plan import CompiledWorkflow, compile_workflow
+from .report import Report
+from .scenarios import ScenarioSpec
+
+__all__ = ["AnalysisService", "OnlineReanalysis", "ServiceStats",
+           "workflow_fingerprint"]
+
+
+def _fp(fn: PPoly) -> tuple:
+    return (fn.starts.tobytes(), fn.coeffs.shape, fn.coeffs.tobytes())
+
+
+def workflow_fingerprint(workflow: Workflow) -> tuple:
+    """Full identity key of a workflow for the service's plan cache.
+
+    Extends the structural level signature with the base *input* functions
+    (resource allocations and external data), so a cache hit returns a plan
+    whose every query — not just the trace — is interchangeable with
+    compiling the workflow afresh.  Sorted by name throughout: two
+    workflows built in different insertion orders still collide.
+    """
+    procs = []
+    for n in sorted(workflow.processes):
+        p = workflow.processes[n]
+        procs.append((
+            n, float(p.total_progress),
+            tuple((d, _fp(dd.requirement)) for d, dd in sorted(p.data.items())),
+            tuple((r, _fp(rd.requirement))
+                  for r, rd in sorted(p.resources.items())),
+            tuple((o, _fp(fn)) for o, fn in sorted(p.outputs.items()))))
+    edges = tuple(sorted((e.src, e.output, e.dst, e.dep)
+                         for e in workflow.edges))
+    gates = tuple(sorted((n, tuple(g)) for n, g in workflow.gates.items()))
+    alloc = tuple((n, tuple((r, _fp(fn)) for r, fn in sorted(d.items())))
+                  for n, d in sorted(workflow.resource_alloc.items()))
+    data = tuple((n, tuple((d, _fp(fn)) for d, fn in sorted(d2.items())))
+                 for n, d2 in sorted(workflow.external_data.items()))
+    return (tuple(procs), edges, gates, alloc, data)
+
+
+@dataclass
+class ServiceStats:
+    """Counters a running :class:`AnalysisService` maintains (thread-safe
+    snapshots via :meth:`AnalysisService.snapshot`)."""
+
+    requests: int = 0          #: client requests accepted
+    scenarios: int = 0         #: scenario rows across all requests
+    sweeps: int = 0            #: fused sweep calls executed (all kinds)
+    coalesced_batches: int = 0  #: sweeps that merged >= 2 requests
+    max_coalesced: int = 0     #: most requests merged into one sweep
+    max_batch_B: int = 0       #: widest stacked scenario axis (pre-padding)
+    plan_hits: int = 0         #: plan-cache hits in compile()
+    plan_misses: int = 0       #: plan-cache misses (fresh compiles)
+    trace_hits: int = 0        #: engines shared via the level signature
+    solo_retries: int = 0      #: requests re-run alone after a batch error
+    latencies_s: deque = field(default_factory=lambda: deque(maxlen=4096))
+
+    def latency_quantiles(self, qs: Sequence[float] = (0.5, 0.99)
+                          ) -> tuple[float, ...]:
+        """Request latencies (submit -> result) at the given quantiles."""
+        if not self.latencies_s:
+            return tuple(float("nan") for _ in qs)
+        arr = np.asarray(self.latencies_s)
+        return tuple(float(np.quantile(arr, q)) for q in qs)
+
+
+@dataclass
+class _Request:
+    plan: CompiledWorkflow
+    future: Future
+    t_submit: float
+    scenarios: list | None = None      # coalescable what-if query
+    pack: ScenarioPack | None = None   # pre-packed (online re-analysis)
+
+
+def _pow2_bucket(b: int) -> int:
+    return 1 << (b - 1).bit_length() if b > 1 else 1
+
+
+class AnalysisService:
+    """Coalescing BottleMod analysis server (see module docstring).
+
+    One daemon worker thread owns every fused sweep, so client threads never
+    contend on the jit caches.  ``autostart=False`` leaves the worker
+    paused — requests queue up and the first drain after :meth:`start`
+    coalesces them all, which load tests and benchmarks use for a
+    deterministic single-batch run.
+
+    ``linger_s > 0`` makes the worker wait that long after the first
+    request of a drain before sweeping, trading latency for wider batches;
+    the default 0 relies on natural batching (requests arriving while a
+    sweep runs coalesce into the next one).
+    """
+
+    def __init__(self, workflow: Workflow | CompiledWorkflow | None = None, *,
+                 backend: str = "auto", max_batch: int = 4096,
+                 linger_s: float = 0.0, pad_pow2: bool = True,
+                 autostart: bool = True):
+        self.backend = backend
+        self.max_batch = int(max_batch)
+        self.linger_s = float(linger_s)
+        self.pad_pow2 = bool(pad_pow2)
+        self.stats = ServiceStats()
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._queue: list[_Request] = []
+        self._plans: dict[tuple, CompiledWorkflow] = {}
+        self._engines: dict[tuple, Any] = {}
+        self._closed = False
+        self._thread: threading.Thread | None = None
+        self._default_plan: CompiledWorkflow | None = (
+            self.compile(workflow) if workflow is not None else None)
+        if autostart:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "AnalysisService":
+        """Start the worker (idempotent); queued requests drain immediately."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("AnalysisService is closed")
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._worker, name="analysis-service", daemon=True)
+                self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop accepting requests, drain the queue, join the worker."""
+        with self._wake:
+            if self._closed:
+                return
+            self._closed = True
+            self._wake.notify_all()
+            thread = self._thread
+        if thread is not None:
+            thread.join()
+        else:
+            # never started: fail the stranded futures instead of hanging
+            for req in self._queue:
+                req.future.set_exception(
+                    RuntimeError("AnalysisService closed before start()"))
+            self._queue.clear()
+
+    def __enter__(self) -> "AnalysisService":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    # -- plan cache ---------------------------------------------------------
+    def compile(self, workflow: Workflow | CompiledWorkflow
+                ) -> CompiledWorkflow:
+        """Compile ``workflow`` through the plan cache.
+
+        Identical workflows (same fingerprint) return the SAME cached plan;
+        structurally identical ones (same level signature, different base
+        inputs) get their own plan but share one fused engine, i.e. one
+        XLA trace per ``(B, shards, iter_cap, ramps)``.
+        """
+        if isinstance(workflow, CompiledWorkflow):
+            with self._lock:
+                self._adopt(workflow)
+            return workflow
+        key = workflow_fingerprint(workflow)
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.stats.plan_hits += 1
+                return plan
+        plan = compile_workflow(workflow)  # slow part outside the lock
+        with self._lock:
+            existing = self._plans.get(key)
+            if existing is not None:
+                self.stats.plan_hits += 1
+                return existing
+            self.stats.plan_misses += 1
+            self._adopt(plan)
+            self._plans[key] = plan
+        return plan
+
+    def _adopt(self, plan: CompiledWorkflow) -> None:
+        """Share one JaxSweepEngine per level signature (caller holds lock)."""
+        lsig = plan.level_signature
+        engine = self._engines.get(lsig)
+        if engine is None:
+            if plan._jax_engine is None:
+                from repro.sweep.jax_engine import JaxSweepEngine
+                plan._jax_engine = JaxSweepEngine(plan)
+            self._engines[lsig] = plan._jax_engine
+        elif plan._jax_engine is None:
+            plan._jax_engine = engine
+            self.stats.trace_hits += 1
+        # plan already carries its own warm engine: keep it
+
+    def _resolve_plan(self, plan: CompiledWorkflow | None,
+                      workflow: Workflow | None) -> CompiledWorkflow:
+        if plan is not None:
+            return self.compile(plan)
+        if workflow is not None:
+            return self.compile(workflow)
+        if self._default_plan is None:
+            raise ValueError(
+                "no plan: pass plan=/workflow= or construct the service "
+                "with a default workflow")
+        return self._default_plan
+
+    # -- queries ------------------------------------------------------------
+    def submit(self, scenarios: Any, *, plan: CompiledWorkflow | None = None,
+               workflow: Workflow | None = None) -> "Future[Report]":
+        """Enqueue a what-if query; resolves to this client's :class:`Report`.
+
+        ``scenarios`` is a single :class:`Scenario`/:class:`ScenarioSpec` or
+        a sequence of them.  Everything queued for the same plan when the
+        worker next drains is stacked into ONE fused sweep.
+        """
+        plan = self._resolve_plan(plan, workflow)
+        if isinstance(scenarios, (Scenario, ScenarioSpec)):
+            scenarios = [scenarios]
+        scs = list(scenarios)
+        if not scs:
+            raise ValueError("submit() needs at least one scenario")
+        if len(scs) > self.max_batch:
+            raise ValueError(
+                f"request of {len(scs)} scenarios exceeds max_batch="
+                f"{self.max_batch}")
+        return self._enqueue(_Request(plan=plan, future=Future(),
+                                      t_submit=time.perf_counter(),
+                                      scenarios=scs))
+
+    def submit_pack(self, pack: ScenarioPack) -> "Future[Report]":
+        """Enqueue a prepared pack (online re-analysis path).
+
+        Packs carry their own solver-ready arrays, so they run as their own
+        fused call on the worker — serialized with, but not merged into,
+        the coalesced what-if batches.
+        """
+        return self._enqueue(_Request(plan=pack.plan, future=Future(),
+                                      t_submit=time.perf_counter(),
+                                      pack=pack))
+
+    def _enqueue(self, req: _Request) -> "Future[Report]":
+        with self._wake:
+            if self._closed:
+                raise RuntimeError("AnalysisService is closed")
+            self._queue.append(req)
+            self.stats.requests += 1
+            self.stats.scenarios += (len(req.scenarios) if req.scenarios
+                                     else req.pack.B)
+            self._wake.notify()
+        return req.future
+
+    def query(self, scenarios: Any, *, plan: CompiledWorkflow | None = None,
+              workflow: Workflow | None = None,
+              timeout: float | None = None) -> Report:
+        """Blocking :meth:`submit`."""
+        return self.submit(scenarios, plan=plan,
+                           workflow=workflow).result(timeout)
+
+    def track(self, scenarios: Any, *, plan: CompiledWorkflow | None = None,
+              workflow: Workflow | None = None) -> "OnlineReanalysis":
+        """An :class:`OnlineReanalysis` session routed through this service."""
+        plan = self._resolve_plan(plan, workflow)
+        return OnlineReanalysis(plan, scenarios, service=self)
+
+    def snapshot(self) -> dict:
+        """A consistent point-in-time copy of the service counters."""
+        with self._lock:
+            p50, p99 = self.stats.latency_quantiles()
+            return {
+                "requests": self.stats.requests,
+                "scenarios": self.stats.scenarios,
+                "sweeps": self.stats.sweeps,
+                "coalesced_batches": self.stats.coalesced_batches,
+                "max_coalesced": self.stats.max_coalesced,
+                "max_batch_B": self.stats.max_batch_B,
+                "plan_hits": self.stats.plan_hits,
+                "plan_misses": self.stats.plan_misses,
+                "trace_hits": self.stats.trace_hits,
+                "solo_retries": self.stats.solo_retries,
+                "latency_p50_s": p50, "latency_p99_s": p99,
+            }
+
+    # -- worker -------------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            with self._wake:
+                while not self._queue and not self._closed:
+                    self._wake.wait()
+                if not self._queue:
+                    return  # closed and drained
+                batch = self._queue
+                self._queue = []
+            if self.linger_s > 0.0 and not self._closed:
+                # widen the batch: let stragglers of a burst arrive
+                time.sleep(self.linger_s)
+                with self._wake:
+                    batch.extend(self._queue)
+                    self._queue = []
+            self._run_batch(batch)
+
+    def _run_batch(self, batch: list[_Request]) -> None:
+        groups: dict[int, list[_Request]] = {}
+        order: list[int] = []
+        for req in batch:
+            key = id(req.plan)
+            if key not in groups:
+                groups[key] = []
+                order.append(key)
+            groups[key].append(req)
+        for key in order:
+            reqs = groups[key]
+            plan = reqs[0].plan
+            packs = [r for r in reqs if r.pack is not None]
+            coalescable = [r for r in reqs if r.scenarios is not None]
+            for req in packs:
+                self._sweep_pack(plan, req)
+            chunk: list[_Request] = []
+            width = 0
+            for req in coalescable:
+                if chunk and width + len(req.scenarios) > self.max_batch:
+                    self._sweep_chunk(plan, chunk)
+                    chunk, width = [], 0
+                chunk.append(req)
+                width += len(req.scenarios)
+            if chunk:
+                self._sweep_chunk(plan, chunk)
+
+    def _sweep_pack(self, plan: CompiledWorkflow, req: _Request) -> None:
+        try:
+            rep = plan.sweep(req.pack, backend=self.backend)
+        except Exception as e:  # noqa: BLE001 — fail THIS request only
+            req.future.set_exception(e)
+            return
+        self._finish(req, rep)
+        with self._lock:
+            self.stats.sweeps += 1
+
+    def _sweep_chunk(self, plan: CompiledWorkflow,
+                     chunk: list[_Request]) -> None:
+        scs = [sc for req in chunk for sc in req.scenarios]
+        B = len(scs)
+        pad = 0
+        if self.pad_pow2:
+            # bucket the stacked axis so the jit cache holds O(log max_batch)
+            # shapes instead of one trace per arrival pattern; padding rows
+            # replicate the last scenario and are never handed to a client
+            pad = min(_pow2_bucket(B), self.max_batch) - B
+        try:
+            rep = plan.sweep(plan.prepare(scs + [scs[-1]] * pad),
+                             backend=self.backend)
+        except Exception as e:  # noqa: BLE001
+            if len(chunk) == 1:
+                chunk[0].future.set_exception(e)
+                return
+            # a poisoned query must not fail its batch neighbors: re-run
+            # each request alone so only the culprit sees the error
+            with self._lock:
+                self.stats.solo_retries += len(chunk)
+            for req in chunk:
+                self._sweep_chunk(plan, [req])
+            return
+        lo = 0
+        for req in chunk:
+            hi = lo + len(req.scenarios)
+            self._finish(req, rep.subset(range(lo, hi)))
+            lo = hi
+        with self._lock:
+            self.stats.sweeps += 1
+            self.stats.max_batch_B = max(self.stats.max_batch_B, B)
+            if len(chunk) > 1:
+                self.stats.coalesced_batches += 1
+                self.stats.max_coalesced = max(self.stats.max_coalesced,
+                                               len(chunk))
+
+    def _finish(self, req: _Request, rep: Report) -> None:
+        lat = time.perf_counter() - req.t_submit
+        with self._lock:
+            self.stats.latencies_s.append(lat)
+        req.future.set_result(rep)
+
+
+class OnlineReanalysis:
+    """Live-run tracking: override-driven re-sweeps of one prepared pack.
+
+    The session prepares its scenarios ONCE; every :meth:`ingest` applies
+    monitoring deltas through ``ScenarioPack.override`` (a delta re-pack —
+    nothing else is resolved, audited, or re-packed) and re-sweeps on the
+    fused engine, so the prediction tracks the live run at re-sweep cost.
+
+    Delta values are whatever ``override`` accepts: a replacement
+    :class:`PPoly` (e.g. a measured rate ramp, or
+    :meth:`ProgressMonitor.measured_progress`), a plain or numpy scalar
+    (scale the base input), or a per-scenario sequence.
+
+    With a ``service``, re-sweeps run on the service worker (serialized
+    with the coalesced traffic); standalone sessions sweep inline.
+    """
+
+    def __init__(self, plan: CompiledWorkflow, scenarios: Any, *,
+                 backend: str = "auto",
+                 service: AnalysisService | None = None):
+        self.plan = plan
+        self._backend = backend
+        self._service = service
+        if isinstance(scenarios, ScenarioPack):
+            self.pack = scenarios
+        else:
+            if isinstance(scenarios, (Scenario, ScenarioSpec)):
+                scenarios = [scenarios]
+            self.pack = plan.prepare(list(scenarios))
+        self.updates = 0
+        self.report: Report | None = None
+
+    def ingest(self, deltas: Mapping[Any, Any] | None = None) -> Report:
+        """Apply monitoring deltas (may be ``None`` for a plain refresh),
+        re-sweep, and return the fresh :class:`Report`."""
+        if deltas:
+            self.pack = self.pack.override(deltas)
+        if self._service is not None:
+            self.report = self._service.submit_pack(self.pack).result()
+        else:
+            self.report = self.plan.sweep(self.pack, backend=self._backend)
+        self.updates += 1
+        return self.report
+
+    def refresh(self) -> Report:
+        """Re-sweep the current pack without new deltas."""
+        return self.ingest(None)

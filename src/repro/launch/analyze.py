@@ -1,0 +1,126 @@
+"""Analysis-service launcher — BottleMod's front door as a server.
+
+``python -m repro.launch.analyze --clients 32 --queries 4``
+
+Starts an :class:`~repro.analysis.serve.AnalysisService` on the paper
+workflow and drives it two ways:
+
+1. **Concurrent what-if load**: N client threads each fire Q queries
+   (resource prioritizations + ramped links); the service coalesces
+   whatever is queued into one fused sweep per drain.  Prints p50/p99
+   request latency, requests/s, and the coalescing counters.
+2. **Online re-analysis**: a simulated live run where the download link
+   degrades mid-flight; measured step timings flow through a
+   :class:`~repro.runtime.monitor.ProgressMonitor` and the measured rate is
+   ingested as a ``ScenarioPack.override`` delta — the predicted makespan
+   tracks the degradation without re-preparing anything.
+"""
+
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--clients", type=int, default=32,
+                    help="concurrent client threads")
+    ap.add_argument("--queries", type=int, default=4,
+                    help="queries per client")
+    ap.add_argument("--linger-ms", type=float, default=0.0,
+                    help="coalescing window the worker waits per drain")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "jax", "numpy"))
+    ap.add_argument("--online-steps", type=int, default=6,
+                    help="monitoring updates in the online re-analysis demo")
+    return ap
+
+
+def _load_phase(svc, plan, clients: int, queries: int) -> None:
+    from repro.analysis import ramp_resource, scale_resource
+
+    rng = np.random.default_rng(0)
+    latencies: list[float] = []
+    lat_lock = threading.Lock()
+    barrier = threading.Barrier(clients)
+
+    def client(ci: int) -> None:
+        barrier.wait()
+        for qi in range(queries):
+            if (ci + qi) % 3:
+                scs = scale_resource("task1", "cpu",
+                                     [float(rng.uniform(0.5, 4.0))])
+            else:  # monitoring-shaped ramp: pw-linear link rate
+                scs = [ramp_resource("dl2", "link", [0.0, 200.0],
+                                     [4e6 * rng.uniform(0.3, 1.0), 0.5e6])]
+            t0 = time.perf_counter()
+            svc.query(scs, plan=plan, timeout=600)
+            with lat_lock:
+                latencies.append(time.perf_counter() - t0)
+
+    svc.query(scale_resource("task1", "cpu", [1.0]), plan=plan)  # warm jit
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    lat = np.sort(latencies)
+    snap = svc.snapshot()
+    print(f"[analyze] load: {clients} clients x {queries} queries in "
+          f"{wall:.2f}s -> {len(lat) / wall:.0f} req/s")
+    print(f"[analyze]   latency p50={np.quantile(lat, 0.5) * 1e3:.1f}ms "
+          f"p99={np.quantile(lat, 0.99) * 1e3:.1f}ms  "
+          f"sweeps={snap['sweeps']} coalesced_batches="
+          f"{snap['coalesced_batches']} max_coalesced={snap['max_coalesced']}")
+
+
+def _online_phase(svc, plan, steps: int) -> None:
+    from repro.configs.paper_workflow import sweep_scenarios
+    from repro.runtime.monitor import ProgressMonitor
+
+    live = svc.track(sweep_scenarios([0.5]), plan=plan)
+    base = live.refresh()
+    print(f"[analyze] online: base predicted makespan "
+          f"{float(base.makespans[0]):.1f}s")
+    mon = ProgressMonitor(predicted_step_s=0.002)
+    for k in range(steps):
+        # simulated live run: each "step" is one monitoring tick; the link
+        # degrades over time, so measured steps take longer than predicted
+        time.sleep(0.002 * (1 + k))
+        mon.record_step(k)  # first record auto-starts the clock
+        measured_rate = (mon.predicted_step_s
+                         / max(mon.durations[-1], mon.predicted_step_s)
+                         if mon.durations else 1.0)
+        rep = live.ingest({"dl1.link": np.float64(measured_rate)})
+        print(f"[analyze]   tick {k}: measured rate {measured_rate:.2f}x -> "
+              f"makespan {float(rep.makespans[0]):.1f}s "
+              f"(progress fn: {mon.measured_progress().n_pieces} pieces)")
+    print(f"[analyze] online: {live.updates} re-analyses, all delta "
+          "re-packs of one prepared pack")
+
+
+def main(argv: list[str] | None = None) -> None:
+    from repro.analysis import AnalysisService
+    from repro.configs.paper_workflow import build_workflow
+
+    args = build_parser().parse_args(argv)
+    with AnalysisService(backend=args.backend,
+                         linger_s=args.linger_ms / 1e3) as svc:
+        plan = svc.compile(build_workflow(0.5))
+        _load_phase(svc, plan, args.clients, args.queries)
+        _online_phase(svc, plan, args.online_steps)
+        snap = svc.snapshot()
+        print(f"[analyze] totals: requests={snap['requests']} "
+              f"scenarios={snap['scenarios']} sweeps={snap['sweeps']} "
+              f"plan_cache={snap['plan_hits']}h/{snap['plan_misses']}m")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,14 +23,23 @@ from repro.models.common import init_params
 from repro.runtime.monitor import ProgressMonitor
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--arch", choices=list_archs(), default="rwkv6-1.6b")
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # BooleanOptionalAction so --no-smoke actually reaches the full config;
+    # the old store_true + default=True made that branch unreachable
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="use the smoke config (default); --no-smoke loads "
+                         "the full architecture config")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
-    args = ap.parse_args()
+    return ap
+
+
+def main(argv: list[str] | None = None):
+    args = build_parser().parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.frontend == "audio":
@@ -49,7 +58,6 @@ def main():
     t0 = time.perf_counter()
     # prefill via repeated decode (cache-building path; exercises the same
     # kernel the 32k dry-run shapes lower)
-    tok = prompts[:, :1]
     logits = None
     for t in range(args.prompt_len):
         logits, cache = decode(cache, {"tokens": jnp.asarray(prompts[:, t:t + 1])}, jnp.int32(t))

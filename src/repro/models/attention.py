@@ -85,8 +85,15 @@ def attn_decode(p, x, cfg: ModelConfig, cache_k, cache_v, pos_idx):
     k = k.transpose(0, 2, 1, 3)                       # (B,Hk,1,Dh)
     v = v.transpose(0, 2, 1, 3)
     slot = pos_idx % S_ctx if cfg.window is not None else pos_idx
-    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, 0, slot, 0))
-    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, 0, slot, 0))
+    # all start indices must share one dtype: a traced int32 pos_idx mixed
+    # with weak python-int zeros breaks under jax_enable_x64 (which the
+    # sweep engine turns on process-wide)
+    zero = jnp.zeros((), jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (zero, zero, slot, zero))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (zero, zero, slot, zero))
     group = H // Hk
     kr = jnp.repeat(ck, group, axis=1)                # (B,H,S_ctx,Dh)
     vr = jnp.repeat(cv, group, axis=1)

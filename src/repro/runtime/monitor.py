@@ -45,6 +45,12 @@ class ProgressMonitor:
 
     def record_step(self, step: int) -> StragglerEvent | None:
         now = time.perf_counter()
+        if self._t_last is None:
+            # auto-start: online re-analysis loops feed the monitor without
+            # ever calling start(); the first record opens the clock and
+            # measures nothing (there is no interval yet)
+            self._t_start = self._t_last = now
+            return None
         dur = now - self._t_last
         self._t_last = now
         self.durations.append(dur)

@@ -127,6 +127,22 @@ def test_pack_override_validates(plan):
         pack.override({"task1.cpu": [1.0, 2.0]})  # B=1 but 2 entries
 
 
+def test_pack_override_accepts_numpy_0d_scalars(plan):
+    """Regression: ``np.isscalar(np.array(2.0))`` is False, so 0-d arrays
+    and numpy scalar kinds — exactly what monitoring feeds hand over — were
+    iterated as sequences and crashed in ``float(v)``.  Every numpy scalar
+    must mean 'scale the base input', bit-identical to the plain float."""
+    pack = plan.prepare(sweep_scenarios([0.3, 0.6, 0.9]))
+    ref = plan.sweep(pack.override({"task1.cpu": 2.0, "dl1.link": 0.7}),
+                     backend="numpy")
+    for two, seven in ((np.array(2.0), np.array(0.7)),
+                       (np.float64(2.0), np.float64(0.7)),
+                       (np.int64(2), np.asarray(0.7))):
+        got = plan.sweep(pack.override({"task1.cpu": two, "dl1.link": seven}),
+                         backend="numpy")
+        _assert_bit_identical(got, ref)
+
+
 def test_pack_from_other_plan_rejected(plan):
     other = build_workflow(0.5).compile()
     pack = other.prepare(sweep_scenarios([0.5]))
@@ -211,6 +227,31 @@ def _mixed_setup():
            sweep.Scenario(label="slow",
                           resource_inputs={("dl", "link"): PPoly.constant(5.0)})]
     return wf.compile(), scs
+
+
+def test_pack_override_on_mixed_routing_pack():
+    """Regression: ``override`` used to validate EVERY scenario's replacement
+    against the batched function class, so any pack with a loop-routed row
+    rejected all deltas.  Only batched rows need validating — the scalar
+    solver accepts any PPoly — and the delta re-pack must equal a fresh
+    prepare of the edited list."""
+    plan, scs = _mixed_setup()
+    quad2 = PPoly(np.array([0.0]), [np.array([4.0, 0.2, 0.02])])
+    repl = [PPoly.constant(30.0), quad2, PPoly.constant(8.0)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        pack = plan.prepare(scs)
+        assert pack.loop_idx == [1]
+        delta = pack.override({"dl.link": repl})  # used to raise here
+        assert delta.loop_idx == [1]
+        edited = [sweep.Scenario(label=sc.label,
+                                 resource_inputs={("dl", "link"): fn})
+                  for sc, fn in zip(scs, repl)]
+        _assert_bit_identical(plan.sweep(delta, backend="auto"),
+                              plan.sweep(plan.prepare(edited), backend="auto"))
+        # batched rows ARE still validated: a quad aimed at row 0 must raise
+        with pytest.raises(sweep.UnsupportedScenario, match="scenario 0"):
+            pack.override({"dl.link": [quad2, quad2, quad2]})
 
 
 def test_summary_surfaces_fallback_rate():

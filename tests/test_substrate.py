@@ -108,6 +108,33 @@ def test_monitor_progress_function_is_bottlemod_ppoly():
     assert float(P(sum(mon.durations))) == pytest.approx(5.0, abs=1e-6)
 
 
+def test_monitor_record_step_auto_starts():
+    """Regression: online re-analysis loops feed record_step without ever
+    calling start(); that used to crash with ``float - NoneType``.  The
+    first record must open the clock, measure nothing, and flag nothing."""
+    mon = ProgressMonitor(predicted_step_s=0.001)
+    assert mon.record_step(0) is None
+    assert mon.durations == []          # no interval existed yet
+    time.sleep(0.002)
+    assert mon.record_step(1) is None   # too few samples to flag
+    assert len(mon.durations) == 1
+    P = mon.measured_progress()
+    assert P.is_monotone_nondecreasing()
+    assert float(P(sum(mon.durations))) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_serve_parser_smoke_flag_roundtrips():
+    """Regression: ``--smoke`` was parsed but never consulted (the config
+    was always built with smoke=True).  The tri-state flag must reach
+    get_config: default on, ``--no-smoke`` off, explicit ``--smoke`` on."""
+    from repro.launch.serve import build_parser
+
+    ap = build_parser()
+    assert ap.parse_args([]).smoke is True
+    assert ap.parse_args(["--no-smoke"]).smoke is False
+    assert ap.parse_args(["--smoke"]).smoke is True
+
+
 # ------------------------------------------------------------------ optim ----
 def test_adamw_converges_quadratic():
     cfg = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=1)
