@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
 * sweep   — batched engine vs looped scalar solver, us/scenario at B=600
 * resweep — prepared-pack re-sweeps on one compiled plan: jax fused engine
             vs numpy lockstep vs the legacy re-compile-every-call shim
+* mc      — B=10k Monte Carlo draws of the paper workflow's uncertainty
+            model as one fused sweep: quantiles + attribution probabilities
 * Fig. 8  — bottleneck structure at 50 % / 95 %
 * Sect. 6 — analysis runtime: BottleMod vs discrete-event simulation,
             1.1 GB vs 100 GB input (the headline scaling claim)
@@ -331,6 +333,40 @@ def bench_serve_coalesced():
             "per-request result == sequential plan.sweep, gated by tests)")
 
 
+def bench_mc_quantiles():
+    """Tentpole row (ISSUE 7): ``plan.mc`` — B=10k Monte Carlo draws of the
+    paper workflow's default uncertainty model analyzed as ONE fused sweep
+    (B=1024 in ``--quick``).
+
+    The row asserts the subsystem's contract before timing: every draw must
+    route to the fused jax engine (one compiled call for the whole draw
+    set, zero scalar fallbacks) — a routing regression would silently turn
+    the 10k-draw query into a Python loop.  The headline ``us_per_call`` is
+    one full ``plan.mc`` invocation (sample + pack + fused sweep +
+    quantiles), min-of-n on a warm plan.
+    """
+    import warnings
+
+    from repro.configs.paper_workflow import build_workflow, mc_spec
+
+    B = 1024 if QUICK else 10_000
+    plan = build_workflow(0.5).compile()
+    spec = mc_spec()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any fallback warning fails the row
+        mc = plan.mc(spec, n=B, seed=0)         # warm (jit compile)
+        assert set(mc.report.backends) == {"jax"}, "draws left the fused path"
+        assert mc.fallback_count == 0, "MC draws fell back to the scalar loop"
+        us = _time(lambda: plan.mc(spec, n=B, seed=0), n=3)
+    q = mc.quantiles()
+    top = mc.attribution()[0]
+    return ("mc_quantiles_b10k", us,
+            f"B={B} draws one fused call: mc={us / 1e3:.0f}ms "
+            f"({us / B:.0f}us/draw) p50={q['p50']:.0f}s p95={q['p95']:.0f}s "
+            f"p99={q['p99']:.0f}s dominant={top.label}@{top.p_dominant:.0%} "
+            "fallbacks=0")
+
+
 def bench_fig8_structure():
     from repro.configs.paper_workflow import build_workflow
     from repro.core import bottleneck_report
@@ -447,6 +483,7 @@ BENCHES = [
     bench_resweep_trace_ops,
     bench_sharded_resweep,
     bench_serve_coalesced,
+    bench_mc_quantiles,
     bench_fig8_structure,
     bench_perf_vs_des,
     bench_stepmodel,

@@ -9,6 +9,8 @@
     plan.whatif(**{"task1.cpu": 2.0})      # one-off override query
     plan.bottleneck_fn()                   # piecewise overall bottleneck
     plan.gain(("task1", "cpu"))            # makespan won by relaxing it
+    plan.mc(spec, n=10_000, seed=0)        # Monte Carlo: quantiles, SLOs,
+                                           #   attribution probabilities
 
 Every query returns the same :class:`~repro.analysis.report.Report` type;
 see :mod:`repro.analysis.scenarios` for the scenario-builder DSL and
@@ -17,19 +19,22 @@ see :mod:`repro.analysis.scenarios` for the scenario-builder DSL and
 
 from .bottleneck import BottleneckFn, BottleneckInterval, derive_bottleneck_fn
 from .pack import ScenarioPack
-from .report import BottleneckRow, FinishTimes, Report, report_from_scalar
+from .report import (BottleneckRow, FinishTimes, Report, concat_reports,
+                     report_from_scalar)
 from .scenarios import (ScenarioSpec, grid, override, ramp_resource,
                         scale_resource, speed_up_data)
-from . import scenarios
+from . import dist, scenarios
+from .uncertainty import MCReport, run_mc, sample_spec
 from .plan import CompiledWorkflow, compile_workflow
 from .serve import (AnalysisService, OnlineReanalysis, ServiceStats,
                     workflow_fingerprint)
 
 __all__ = [
     "AnalysisService", "BottleneckFn", "BottleneckInterval", "BottleneckRow",
-    "CompiledWorkflow", "FinishTimes", "OnlineReanalysis", "Report",
-    "ScenarioPack", "ScenarioSpec", "ServiceStats", "compile_workflow",
-    "derive_bottleneck_fn", "grid", "override", "ramp_resource",
-    "report_from_scalar", "scale_resource", "scenarios", "speed_up_data",
+    "CompiledWorkflow", "FinishTimes", "MCReport", "OnlineReanalysis",
+    "Report", "ScenarioPack", "ScenarioSpec", "ServiceStats",
+    "compile_workflow", "concat_reports", "derive_bottleneck_fn", "dist",
+    "grid", "override", "ramp_resource", "report_from_scalar", "run_mc",
+    "sample_spec", "scale_resource", "scenarios", "speed_up_data",
     "workflow_fingerprint",
 ]

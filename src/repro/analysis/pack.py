@@ -61,6 +61,10 @@ class ScenarioPack:
     loop_idx: list[int]
     reason: str | None
     proc_args: dict[str, dict[str, dict[str, BPL]]] = field(repr=False)
+    #: per loop-routed scenario index: WHY it fell off the batched class
+    #: (the offending input with its degree/shape) — surfaces in
+    #: ``Report.fallback_reasons`` / ``MCReport.fallback_reasons()``
+    loop_reasons: dict[int, str] = field(default_factory=dict, repr=False)
     shards: int = 1
     #: static degree signature of the packed batch: True when any resource
     #: input ramps (non-zero slope) or any packed function carries a
@@ -114,8 +118,11 @@ class ScenarioPack:
             bat_idx = [i for i, r in enumerate(reasons) if r is None]
             loop_idx = [i for i, r in enumerate(reasons) if r is not None]
             reason = next((r for r in reasons if r is not None), None)
+            loop_reasons = {i: r for i, r in enumerate(reasons)
+                            if r is not None}
         else:
             bat_idx, loop_idx, reason = [], list(range(B)), None
+            loop_reasons = {}
         proc_args: dict[str, dict[str, dict[str, BPL]]] = {}
         if bat_idx:
             try:
@@ -123,12 +130,15 @@ class ScenarioPack:
             except UnsupportedScenario as e:
                 # defensive: packing found an out-of-class construct the
                 # static audit missed — route everything to the scalar loop
+                for i in bat_idx:
+                    loop_reasons.setdefault(i, str(e))
                 loop_idx = sorted(loop_idx + bat_idx)
                 bat_idx, proc_args = [], {}
                 reason = reason or str(e)
         return ScenarioPack(plan=plan, labels=labels, scenarios=scenarios,
                             bat_idx=bat_idx, loop_idx=loop_idx, reason=reason,
-                            proc_args=proc_args, ramps=_compute_ramps(proc_args))
+                            proc_args=proc_args, loop_reasons=loop_reasons,
+                            ramps=_compute_ramps(proc_args))
 
     # ------------------------------------------------------------------
     def shard(self, n: int | None = None) -> "ScenarioPack":
@@ -151,7 +161,7 @@ class ScenarioPack:
                             scenarios=self.scenarios, bat_idx=self.bat_idx,
                             loop_idx=self.loop_idx, reason=self.reason,
                             proc_args=self.proc_args, shards=n,
-                            ramps=self.ramps,
+                            loop_reasons=self.loop_reasons, ramps=self.ramps,
                             # sharded sweeps key device arrays by shard
                             # count, so the memo is safe (and warm) to share
                             _cache=self._cache)
@@ -218,6 +228,7 @@ class ScenarioPack:
                             bat_idx=self.bat_idx, loop_idx=self.loop_idx,
                             reason=self.reason, proc_args=proc_args,
                             shards=self.shards,
+                            loop_reasons=dict(self.loop_reasons),
                             ramps=_compute_ramps(proc_args))
 
 

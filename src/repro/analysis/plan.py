@@ -24,8 +24,12 @@ The resulting :class:`CompiledWorkflow` then serves
   bottleneck function over runtime,
 * :meth:`~CompiledWorkflow.gain` / :meth:`~CompiledWorkflow.gains` — the
   estimated makespan reduction from relaxing a bottleneck,
+* :meth:`~CompiledWorkflow.mc` — Monte Carlo analysis of distribution-valued
+  scenarios (:mod:`repro.analysis.uncertainty`): makespan quantiles, SLO
+  probabilities, bottleneck-attribution probabilities, sensitivity ranking,
 
-all returning the unified :class:`~repro.analysis.report.Report`.
+all returning the unified :class:`~repro.analysis.report.Report` (``mc``
+wraps one in an ``MCReport``).
 """
 
 from __future__ import annotations
@@ -54,6 +58,14 @@ __all__ = ["CompiledWorkflow", "compile_workflow"]
 SWEEP_BACKENDS = ("auto", "jax", "numpy", "batched", "loop")
 
 _FactorKey = tuple[str, str, str]
+
+
+def _describe_fn(fn: PPoly) -> str:
+    """The degree/shape census entry for an out-of-class input function."""
+    desc = f"degree {fn.degree}, {fn.n_pieces} piece(s)"
+    if fn.is_piecewise_linear and not is_batchable_resource(fn):
+        desc += ", goes negative"
+    return desc
 
 
 def compile_workflow(workflow: Workflow) -> "CompiledWorkflow":
@@ -337,6 +349,36 @@ class CompiledWorkflow:
         return proc, kind, name
 
     # ------------------------------------------------------------------
+    # Monte Carlo path (repro.analysis.uncertainty)
+    # ------------------------------------------------------------------
+    def mc(self, spec: Any, n: int = 10_000, *, seed: int = 0,
+           backend: str = "auto", shards: int | None = None,
+           quantile_levels: Sequence[float] | None = None) -> Any:
+        """Monte Carlo analysis of a distribution-valued scenario spec.
+
+        ``spec`` carries :mod:`repro.analysis.dist` distributions on resource
+        caps, ramp slopes, or data scale factors; ``n`` draws are sampled
+        deterministically from ``seed`` and analyzed as ONE fused sweep::
+
+            from repro.analysis import dist, scenarios
+            mc = plan.mc(scenarios.override({
+                "dl2.link": dist.lognormal(sigma=0.3)}), n=10_000, seed=7)
+            mc.quantiles()                  # {'p50': ..., 'p95': ..., 'p99': ...}
+            mc.prob(makespan_le=250.0)      # SLO query
+            mc.attribution()[0]             # "dl2.link binds in 83% of draws"
+            mc.sensitivity()                # variance-based axis ranking
+
+        Returns an :class:`repro.analysis.uncertainty.MCReport`; see that
+        module for the sampler's bit-reproducibility contract.
+        """
+        from .uncertainty import DEFAULT_QUANTILES, run_mc
+
+        return run_mc(self, spec, n, seed=seed, backend=backend,
+                      shards=shards,
+                      quantile_levels=(DEFAULT_QUANTILES if quantile_levels
+                                       is None else quantile_levels))
+
+    # ------------------------------------------------------------------
     # batched sweep path
     # ------------------------------------------------------------------
     def prepare(self, scenario_list: Sequence[Scenario | ScenarioSpec],
@@ -401,8 +443,10 @@ class CompiledWorkflow:
         bat_idx = list(pack.bat_idx)
         loop_idx = list(pack.loop_idx)
         reason = pack.reason
+        loop_reasons = dict(pack.loop_reasons)
         if backend == "loop":
             bat_idx, loop_idx, reason = [], list(range(B)), None
+            loop_reasons = {}
         elif backend != "auto" and loop_idx:
             raise UnsupportedScenario(
                 f"scenario {loop_idx[0]} ({pack.labels[loop_idx[0]] or 'unlabeled'}): "
@@ -428,6 +472,8 @@ class CompiledWorkflow:
                     raise
                 # defensive: the engine found an out-of-class construct the
                 # static audit missed — run those scenarios on the loop
+                for i in bat_idx:
+                    loop_reasons.setdefault(i, str(e))
                 loop_idx = sorted(loop_idx + bat_idx)
                 bat_idx = []
                 reason = reason or str(e)
@@ -440,7 +486,8 @@ class CompiledWorkflow:
                 f"function class fell back to the scalar loop backend "
                 f"({reason}); see Report.backends for the per-scenario "
                 "routing", UserWarning, stacklevel=2)
-        return self._merge(pack, bat_idx, batched, loop_runs, engine_used)
+        return self._merge(pack, bat_idx, batched, loop_runs, engine_used,
+                           loop_reasons)
 
     def _classify(self, sc: Scenario) -> str | None:
         """None when the scenario fits the lockstep engine, else the reason.
@@ -451,27 +498,34 @@ class CompiledWorkflow:
         form), data inputs any function of degree <= 2.  Only degree >= 2
         resource rates, negative rates, or degree >= 3 data inputs still
         fall back to the scalar loop.
+
+        The reason string names the offending input AND its actual
+        degree/shape — aggregated per sweep into ``Report.fallback_reasons``
+        (and ``MCReport.fallback_reasons()``), the demand census the roadmap
+        wants before a cubic/quartic engine class is built.
         """
         if self._class_reason is not None:
             return self._class_reason
         for key, fn in sc.resource_inputs.items():
             if not is_batchable_resource(fn):
-                return (f"resource input {key[0]}.{key[1]} must be a "
-                        "non-negative piecewise-linear rate for the "
-                        "batched engine")
+                return (f"resource input {key[0]}.{key[1]} "
+                        f"({_describe_fn(fn)}) must be a non-negative "
+                        "piecewise-linear rate for the batched engine")
         for key, ok in self._base_res_ok.items():
             if not ok and key not in sc.resource_inputs:
-                return (f"base resource input {key[0]}.{key[1]} must be a "
+                return (f"base resource input {key[0]}.{key[1]} "
+                        f"({_describe_fn(self.base_res[key])}) must be a "
                         "non-negative piecewise-linear rate for the "
                         "batched engine")
         for key, fn in sc.data_inputs.items():
             if not fn.is_piecewise_quadratic:
-                return (f"data input {key[0]}.{key[1]} must have degree <= 2 "
-                        "for the batched engine")
+                return (f"data input {key[0]}.{key[1]} ({_describe_fn(fn)}) "
+                        "must have degree <= 2 for the batched engine")
         for key, ok in self._base_data_ok.items():
             if not ok and key not in sc.data_inputs:
-                return (f"base data input {key[0]}.{key[1]} must have degree "
-                        "<= 2 for the batched engine")
+                return (f"base data input {key[0]}.{key[1]} "
+                        f"({_describe_fn(self.base_data[key])}) must have "
+                        "degree <= 2 for the batched engine")
         return None
 
     def _audit_function_class(self) -> str | None:
@@ -582,7 +636,8 @@ class CompiledWorkflow:
     def _merge(self, pack: ScenarioPack, bat_idx: list[int],
                batched: dict[str, BatchProcResult] | None,
                loop_runs: dict[int, dict[str, ProgressResult]],
-               engine_used: str = "batched") -> Report:
+               engine_used: str = "batched",
+               loop_reasons: dict[int, str] | None = None) -> Report:
         B = pack.B
         labels = pack.labels
         makespans = np.zeros(B)
@@ -642,4 +697,5 @@ class CompiledWorkflow:
             finish=finish, factors=factors, share_seconds=share_seconds,
             share_fractions=share_fractions, backends=backends,
             proc_results=batched if not loop_runs else None,
-            plan=self, scenarios=pack.scenarios)
+            plan=self, scenarios=pack.scenarios,
+            fallback_reasons=dict(loop_reasons) if loop_reasons else None)

@@ -33,7 +33,8 @@ if TYPE_CHECKING:  # imported lazily at runtime to keep the package acyclic
 
     from .plan import CompiledWorkflow
 
-__all__ = ["BottleneckRow", "FinishTimes", "Report", "report_from_scalar"]
+__all__ = ["BottleneckRow", "FinishTimes", "Report", "concat_reports",
+           "report_from_scalar"]
 
 
 @dataclass
@@ -84,6 +85,10 @@ class Report:
     scalar_results: dict[str, ProgressResult] | None = None
     plan: CompiledWorkflow | None = field(default=None, repr=False, compare=False)
     scenarios: list[Scenario] | None = field(default=None, repr=False, compare=False)
+    #: scenario index -> why it fell off the batched function class (with
+    #: the offending input's degree/shape); None when nothing fell back
+    fallback_reasons: dict[int, str] | None = field(
+        default=None, repr=False, compare=False)
     _drill_cache: dict[int, dict[str, ProgressResult]] = field(
         default_factory=dict, repr=False, compare=False)
 
@@ -133,7 +138,11 @@ class Report:
             backends=[self.backends[i] for i in idx],
             plan=self.plan,
             scenarios=([self.scenarios[i] for i in idx]
-                       if self.scenarios is not None else None))
+                       if self.scenarios is not None else None),
+            fallback_reasons=({j: self.fallback_reasons[int(i)]
+                               for j, i in enumerate(idx)
+                               if int(i) in self.fallback_reasons}
+                              if self.fallback_reasons else None) or None)
 
     def summary(self) -> str:
         """Human-readable digest: backend routing (surfacing the
@@ -153,8 +162,17 @@ class Report:
             shown = ", ".join(str(i) for i in fb[:10])
             more = f", ... (+{len(fb) - 10} more)" if len(fb) > 10 else ""
             lines.append(
-                f"scalar fallback: {len(fb)}/{self.B} scenario(s) ran on the "
-                f"loop backend (indices [{shown}{more}])")
+                f"scalar fallback: {len(fb)}/{self.B} scenario(s) "
+                f"({len(fb) / self.B:.2%}) ran on the loop backend "
+                f"(indices [{shown}{more}])")
+            if self.fallback_reasons:
+                census: dict[str, int] = {}
+                for i in fb:
+                    r = self.fallback_reasons.get(i)
+                    if r is not None:
+                        census[r] = census.get(r, 0) + 1
+                for r, c in sorted(census.items(), key=lambda kv: -kv[1])[:3]:
+                    lines.append(f"  - {r} (x{c})")
         finite = self.makespans[np.isfinite(self.makespans)]
         if len(finite):
             i, label, ms = self.top_k(1)[0]
@@ -304,6 +322,68 @@ def scalar_shares(results: dict[str, ProgressResult], order: Iterable[str],
             secs.append(s)
             fracs.append(s / total)
     return keys, secs, fracs
+
+
+def concat_reports(reports: "Iterable[Report]") -> Report:
+    """Row-concatenate batched reports of one workflow onto a union factor
+    axis — the inverse of :meth:`Report.subset`.
+
+    Used by ``AnalysisService.submit_mc`` to stitch a large Monte Carlo draw
+    set back together after the coalescing worker swept it in ``max_batch``
+    chunks.  Factor columns are matched by ``(process, kind, name)`` key —
+    chunks that never saw a factor contribute zero share for it — and
+    per-scenario fallback reasons are re-indexed onto the combined axis.
+    """
+    reps = list(reports)
+    if not reps:
+        raise ValueError("concat_reports: need at least one report")
+    if len(reps) == 1:
+        return reps[0]
+    if any(r.is_scalar for r in reps):
+        raise ValueError("concat_reports applies to batched (sweep) reports")
+    order = reps[0].order
+    for r in reps[1:]:
+        if r.order != order:
+            raise ValueError(
+                "concat_reports: reports analyze different workflows "
+                f"({r.order} vs {order})")
+    factors: list[tuple[str, str, str]] = []
+    fac_index: dict[tuple[str, str, str], int] = {}
+    for r in reps:
+        for key in r.factors:
+            if key not in fac_index:
+                fac_index[key] = len(factors)
+                factors.append(key)
+    B = sum(r.B for r in reps)
+    secs = np.zeros((B, len(factors)))
+    fracs = np.zeros((B, len(factors)))
+    have_sc = all(r.scenarios is not None for r in reps)
+    scenarios: list[Scenario] = []
+    fallback_reasons: dict[int, str] = {}
+    off = 0
+    for r in reps:
+        cols = [fac_index[k] for k in r.factors]
+        if cols:
+            secs[off:off + r.B, cols] = r.share_seconds
+            fracs[off:off + r.B, cols] = r.share_fractions
+        for i, why in (r.fallback_reasons or {}).items():
+            fallback_reasons[off + int(i)] = why
+        if have_sc:
+            scenarios.extend(r.scenarios)  # type: ignore[arg-type]
+        off += r.B
+    plan = reps[0].plan
+    if any(r.plan is not plan for r in reps):
+        plan = None
+    return Report(
+        labels=[lab for r in reps for lab in r.labels],
+        order=list(order),
+        makespans=np.concatenate([r.makespans for r in reps]),
+        finish=FinishTimes({n: np.concatenate([r.finish[n] for r in reps])
+                            for n in order}),
+        factors=factors, share_seconds=secs, share_fractions=fracs,
+        backends=[b for r in reps for b in r.backends],
+        plan=plan, scenarios=scenarios if have_sc else None,
+        fallback_reasons=fallback_reasons or None)
 
 
 def report_from_scalar(results: dict[str, ProgressResult], order: list[str],

@@ -37,6 +37,7 @@ into the front door of an analysis *service* built from three pieces:
     fut.result().makespans                       # this client's rows only
     live = svc.track(sweep_scenarios([0.5]))
     live.ingest({"dl1.link": measured_rate})     # delta re-pack + re-sweep
+    svc.submit_mc(spec, n=10_000).result().p95   # Monte Carlo via the worker
     svc.stats.latency_quantiles()                # (p50, p99) seconds
 """
 
@@ -57,8 +58,10 @@ from repro.sweep.batch import Scenario
 
 from .pack import ScenarioPack
 from .plan import CompiledWorkflow, compile_workflow
-from .report import Report
+from .report import Report, concat_reports
 from .scenarios import ScenarioSpec
+from .uncertainty import (DEFAULT_QUANTILES, MCReport, mc_report_from_sweep,
+                          sample_spec)
 
 __all__ = ["AnalysisService", "OnlineReanalysis", "ServiceStats",
            "workflow_fingerprint"]
@@ -315,6 +318,65 @@ class AnalysisService:
         return self.submit(scenarios, plan=plan,
                            workflow=workflow).result(timeout)
 
+    def submit_mc(self, spec: Any, n: int = 10_000, *, seed: int = 0,
+                  plan: CompiledWorkflow | None = None,
+                  workflow: Workflow | None = None,
+                  quantile_levels: Sequence[float] = DEFAULT_QUANTILES,
+                  ) -> "Future[MCReport]":
+        """Enqueue a Monte Carlo distribution query; resolves to an
+        :class:`~repro.analysis.uncertainty.MCReport`.
+
+        The ``n`` draws are sampled host-side immediately (same deterministic
+        sampler as ``plan.mc`` — identical ``seed`` gives bit-identical
+        scenarios) and enqueued in ``max_batch``-sized chunks as ordinary
+        coalescable requests, so probabilistic queries ride the same worker,
+        plan cache, and fused XLA traces as the what-if traffic — and batch
+        WITH it.  Chunk reports are stitched back together with
+        :func:`~repro.analysis.report.concat_reports` when the last chunk
+        lands.
+        """
+        plan = self._resolve_plan(plan, workflow)
+        samples = sample_spec(plan, spec, n, seed)
+        chunk_futs: list[Future] = []
+        for lo in range(0, n, self.max_batch):
+            scs = samples.scenarios[lo:lo + self.max_batch]
+            chunk_futs.append(self._enqueue(
+                _Request(plan=plan, future=Future(),
+                         t_submit=time.perf_counter(), scenarios=scs)))
+        out: "Future[MCReport]" = Future()
+        state = {"pending": len(chunk_futs)}
+        state_lock = threading.Lock()
+
+        def _on_done(f: Future) -> None:
+            with state_lock:
+                if out.done():
+                    return
+                exc = f.exception()
+                if exc is not None:
+                    out.set_exception(exc)
+                    return
+                state["pending"] -= 1
+                if state["pending"]:
+                    return
+            try:
+                rep = concat_reports(ft.result() for ft in chunk_futs)
+                out.set_result(mc_report_from_sweep(
+                    rep, samples, quantile_levels))
+            except Exception as e:  # noqa: BLE001 — surface via the future
+                out.set_exception(e)
+
+        for ft in chunk_futs:
+            ft.add_done_callback(_on_done)
+        return out
+
+    def query_mc(self, spec: Any, n: int = 10_000, *, seed: int = 0,
+                 plan: CompiledWorkflow | None = None,
+                 workflow: Workflow | None = None,
+                 timeout: float | None = None) -> MCReport:
+        """Blocking :meth:`submit_mc`."""
+        return self.submit_mc(spec, n, seed=seed, plan=plan,
+                              workflow=workflow).result(timeout)
+
     def track(self, scenarios: Any, *, plan: CompiledWorkflow | None = None,
               workflow: Workflow | None = None) -> "OnlineReanalysis":
         """An :class:`OnlineReanalysis` session routed through this service."""
@@ -485,3 +547,28 @@ class OnlineReanalysis:
     def refresh(self) -> Report:
         """Re-sweep the current pack without new deltas."""
         return self.ingest(None)
+
+    def mc(self, spec: Any, n: int = 1024, *, seed: int = 0, template: int = 0,
+           quantile_levels: Sequence[float] = DEFAULT_QUANTILES) -> MCReport:
+        """A distribution query around the session's CURRENT tracked state.
+
+        Samples ``n`` draws of ``spec`` (deterministic, like ``plan.mc``),
+        then fills every input the draws do *not* touch from tracked scenario
+        ``template`` — so ingested monitoring deltas (measured rates,
+        progress) stay in effect while the spec'd axes vary.  Sampled axes
+        themselves scale the plan's base inputs.  With a service attached the
+        fused sweep runs on its worker, sharing traces with live traffic.
+        """
+        samples = sample_spec(self.plan, spec, n, seed)
+        base = self.pack.scenarios[template]
+        for sc in samples.scenarios:
+            for k, fn in base.resource_inputs.items():
+                sc.resource_inputs.setdefault(k, fn)
+            for k, fn in base.data_inputs.items():
+                sc.data_inputs.setdefault(k, fn)
+        pack = self.plan.prepare(samples.scenarios)
+        if self._service is not None:
+            rep = self._service.submit_pack(pack).result()
+        else:
+            rep = self.plan.sweep(pack, backend=self._backend)
+        return mc_report_from_sweep(rep, samples, quantile_levels)

@@ -14,6 +14,10 @@ workflow and drives it two ways:
    :class:`~repro.runtime.monitor.ProgressMonitor` and the measured rate is
    ingested as a ``ScenarioPack.override`` delta — the predicted makespan
    tracks the degradation without re-preparing anything.
+3. **Distribution query** (``--mc``): the degrading-link scenario re-run as
+   a Monte Carlo question through ``OnlineReanalysis.mc`` — "given the link
+   we are *measuring*, what is the p95 makespan and what dominates it?" —
+   with the sampled draws batched through the same coalescing service.
 """
 
 from __future__ import annotations
@@ -37,6 +41,11 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=("auto", "jax", "numpy"))
     ap.add_argument("--online-steps", type=int, default=6,
                     help="monitoring updates in the online re-analysis demo")
+    ap.add_argument("--mc", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the Monte Carlo distribution-query phase")
+    ap.add_argument("--mc-draws", type=int, default=2048,
+                    help="Monte Carlo draws in the --mc phase")
     return ap
 
 
@@ -104,6 +113,35 @@ def _online_phase(svc, plan, steps: int) -> None:
               f"(progress fn: {mon.measured_progress().n_pieces} pieces)")
     print(f"[analyze] online: {live.updates} re-analyses, all delta "
           "re-packs of one prepared pack")
+    return live
+
+
+def _mc_phase(live, draws: int) -> None:
+    from repro.analysis import dist, scenarios
+
+    # The degrading-link state is inherited from the tracked scenario (the
+    # last ingested measurement); the distribution query asks what the
+    # remaining uncertainty does to the makespan on top of it.
+    spec = scenarios.override(
+        label="live-mc",
+        resources={("task1", "cpu"): dist.lognormal(sigma=0.2),
+                   ("task2", "cpu"): dist.uniform(0.7, 1.3),
+                   ("dl2", "link"): dist.lognormal(sigma=0.15)},
+    )
+    t0 = time.perf_counter()
+    mc = live.mc(spec, n=draws, seed=0)
+    wall = time.perf_counter() - t0
+    top = mc.attribution()[0]
+    sens = mc.sensitivity()[0]
+    print(f"[analyze] mc: {draws} draws on the measured-link state in "
+          f"{wall:.2f}s ({wall / draws * 1e6:.0f}us/draw, "
+          f"{mc.fallback_count} fallbacks)")
+    print(f"[analyze]   makespan p50={mc.p50:.1f}s p95={mc.p95:.1f}s "
+          f"p99={mc.p99:.1f}s  P(makespan <= {mc.p50 * 1.2:.0f}s)="
+          f"{mc.prob(makespan_le=mc.p50 * 1.2):.2f}")
+    print(f"[analyze]   dominant bottleneck: {top.label} "
+          f"(p={top.p_dominant:.2f}); most sensitive factor: "
+          f"{sens.axis} (s1={sens.s1:.2f}, rho={sens.rho:+.2f})")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -115,7 +153,9 @@ def main(argv: list[str] | None = None) -> None:
                          linger_s=args.linger_ms / 1e3) as svc:
         plan = svc.compile(build_workflow(0.5))
         _load_phase(svc, plan, args.clients, args.queries)
-        _online_phase(svc, plan, args.online_steps)
+        live = _online_phase(svc, plan, args.online_steps)
+        if args.mc:
+            _mc_phase(live, args.mc_draws)
         snap = svc.snapshot()
         print(f"[analyze] totals: requests={snap['requests']} "
               f"scenarios={snap['scenarios']} sweeps={snap['sweeps']} "

@@ -70,3 +70,24 @@ def test_plin_override_grid_zero_fallbacks(plan):
         warnings.simplefilter("error")
         rep = plan.sweep(plan.prepare(scs), backend="auto")
     _assert_no_fallback(rep, 6)
+
+
+def test_paper_mc_distributions_zero_fallbacks(plan):
+    """The default paper-workflow Monte Carlo model stays on the fast path.
+
+    Every draw of ``mc_spec()`` (lognormal link/CPU jitter, uniform
+    contention, triangular data timing) must classify into the batched
+    quadratic class — the MC subsystem's 10k-draw pitch collapses if the
+    default distributions leak onto the scalar loop.
+    """
+    from repro.configs.paper_workflow import mc_spec
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # the aggregated warning must not fire
+        mc = plan.mc(mc_spec(), n=256, seed=0)
+    assert mc.fallback_count == 0 and mc.fallback_rate == 0.0
+    assert set(mc.report.backends) == {"jax"}
+    _assert_no_fallback(mc.report, 256)
+    s = mc.summary()
+    assert "0 draws off the batched quadratic class" in s
+    assert "fallback" not in s and "loop" not in s

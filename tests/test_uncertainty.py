@@ -1,0 +1,332 @@
+"""Monte Carlo scenario subsystem (ISSUE 7): sampler determinism, oracle
+parity, attribution/sensitivity semantics, service integration.
+
+Contracts under test:
+
+* the distribution DSL validates its parameters and turns specs into
+  Monte Carlo intent (``resolve()`` refuses, ``plan.mc`` accepts),
+* same seed ⇒ bit-identical ``MCReport`` across runs, across processes, and
+  across ``shard(n)`` device counts (subprocess under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4``),
+* quantiles / SLO probabilities / attribution probabilities match a
+  numpy-engine oracle computed from the SAME sampled scenario list,
+* sensitivity ranking finds the axis that actually drives the variance,
+* one aggregated fallback warning per ``mc`` call, carrying the rate, and a
+  degree/shape census in ``MCReport.fallback_reasons()``,
+* ``AnalysisService.submit_mc`` (chunked through the coalescing worker)
+  returns bit-identical results to ``plan.mc``.
+"""
+
+import hashlib
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.analysis import AnalysisService, dist, scenarios
+from repro.analysis.uncertainty import (MCReport, mc_report_from_sweep,
+                                        run_mc, sample_spec)
+from repro.configs.paper_workflow import build_workflow, mc_spec
+from repro.core import PPoly
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# one tiny link-limited workflow shared (verbatim) with the subprocess test:
+# makespan = 1000 / (10 * factor) for a constant-rate draw
+_TINY_WF = """
+from repro.core import DataDep, PPoly, Process, ResourceDep, Workflow
+
+def make_plan():
+    n = 1000.0
+    wf = Workflow()
+    wf.add(Process("dl", data={"file": DataDep.stream(n, n)},
+                   resources={"link": ResourceDep.stream(n, n)},
+                   total_progress=n).identity_output(),
+           resources={"link": PPoly.constant(10.0)})
+    wf.set_data_input("dl", "file", PPoly.constant(n))
+    return wf.compile()
+"""
+exec(_TINY_WF, globals())
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return build_workflow(0.5).compile()
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return make_plan()  # noqa: F821 — defined by the exec'd block above
+
+
+def _digest(mc: MCReport) -> str:
+    h = hashlib.sha256()
+    h.update(mc.makespans.tobytes())
+    for k in sorted(mc.samples):
+        h.update(k.encode())
+        h.update(mc.samples[k].tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------- DSL ----
+def test_dist_factories_validate():
+    with pytest.raises(ValueError, match="median"):
+        dist.lognormal(median=0.0)
+    with pytest.raises(ValueError, match="sigma"):
+        dist.lognormal(sigma=-0.1)
+    with pytest.raises(ValueError, match="hi > lo"):
+        dist.uniform(2.0, 1.0)
+    with pytest.raises(ValueError, match="triangular"):
+        dist.triangular(0.5, 2.0, 1.0)
+    with pytest.raises(ValueError, match="at least one"):
+        dist.discrete([])
+    with pytest.raises(ValueError, match="probs"):
+        dist.discrete([1.0, 2.0], [0.5])
+
+
+def test_dist_sampling_ranges():
+    u = np.linspace(0.0, 1.0, 101, endpoint=False)[:, None]
+    x = dist.uniform(0.5, 1.5).sample(u)
+    assert x.min() >= 0.5 and x.max() < 1.5
+    x = dist.triangular(0.8, 1.0, 1.3).sample(u)
+    assert x.min() >= 0.8 and x.max() <= 1.3
+    x = dist.discrete([0.3, 1.0], [0.25, 0.75]).sample(u)
+    assert set(np.unique(x)) == {0.3, 1.0}
+    assert abs((x == 0.3).mean() - 0.25) < 0.05
+    u2 = np.random.default_rng(0).random((4000, 2))
+    x = dist.lognormal(sigma=0.25).sample(u2)
+    assert (x > 0).all()
+    assert abs(np.median(x) - 1.0) < 0.05   # median-parameterized
+
+
+def test_spec_with_dists_is_mc_intent(plan):
+    spec = scenarios.override({"dl1.link": dist.lognormal(sigma=0.1)})
+    assert spec.has_distributions
+    with pytest.raises(ValueError, match=r"plan\.mc"):
+        spec.resolve(plan.workflow)
+    with pytest.raises(ValueError, match=r"plan\.mc"):
+        plan.sweep([spec])
+    # fixed-value specs are untouched by the DSL extension
+    assert not scenarios.override({"dl1.link": 2.0}).has_distributions
+
+
+def test_sample_spec_errors(tiny):
+    with pytest.raises(ValueError, match="unknown process"):
+        sample_spec(tiny, scenarios.override({"nope.link": dist.uniform(1, 2)}), 4)
+    with pytest.raises(ValueError, match="no input"):
+        sample_spec(tiny, scenarios.override({"dl.nope": dist.uniform(1, 2)}), 4)
+    with pytest.raises(ValueError, match="n >= 1"):
+        sample_spec(tiny, scenarios.override({"dl.link": dist.uniform(1, 2)}), 0)
+    with pytest.raises(ValueError, match="empty"):
+        sample_spec(tiny, [], 4)
+
+
+def test_edge_fed_data_axis_rejected(plan):
+    spec = scenarios.override(data={("task1", "video"): dist.uniform(1, 2)})
+    with pytest.raises(ValueError, match="produced by"):
+        sample_spec(plan, spec, 4)
+
+
+# ------------------------------------------------------- determinism ----
+def test_same_seed_bit_identical(tiny):
+    spec = scenarios.override({"dl.link": dist.lognormal(sigma=0.3)})
+    a = tiny.mc(spec, n=200, seed=42)
+    b = tiny.mc(spec, n=200, seed=42)
+    assert _digest(a) == _digest(b)
+    np.testing.assert_array_equal(a.report.share_seconds,
+                                  b.report.share_seconds)
+    c = tiny.mc(spec, n=200, seed=43)
+    assert _digest(a) != _digest(c)
+
+
+def test_mapping_and_spec_inputs_equivalent(tiny):
+    by_map = tiny.mc({"dl.link": dist.uniform(0.5, 2.0)}, n=64, seed=1)
+    by_spec = tiny.mc(scenarios.override({"dl.link": dist.uniform(0.5, 2.0)}),
+                      n=64, seed=1)
+    np.testing.assert_array_equal(by_map.makespans, by_spec.makespans)
+
+
+def test_shard_bit_identity_subprocess():
+    """Same seed ⇒ bit-identical MCReport across shard(n) device counts AND
+    across processes (the sampler never touches device state)."""
+    code = _TINY_WF + """
+import hashlib, numpy as np, jax
+assert jax.local_device_count() == 4, jax.local_device_count()
+from repro.analysis import dist, scenarios
+plan = make_plan()
+spec = scenarios.override({"dl.link": dist.lognormal(sigma=0.3)})
+m1 = plan.mc(spec, n=14, seed=42)          # B=14 not divisible by 4
+m4 = plan.mc(spec, n=14, seed=42, shards=4)
+np.testing.assert_array_equal(m1.makespans, m4.makespans)
+np.testing.assert_array_equal(m1.report.share_seconds,
+                              m4.report.share_seconds)
+h = hashlib.sha256()
+h.update(m4.makespans.tobytes())
+for k in sorted(m4.samples):
+    h.update(k.encode()); h.update(m4.samples[k].tobytes())
+print("MC-SHARD-OK", h.hexdigest())
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = next(ln for ln in out.stdout.splitlines()
+                if ln.startswith("MC-SHARD-OK"))
+    # and the 4-device digest equals THIS process's 1-device digest
+    spec = scenarios.override({"dl.link": dist.lognormal(sigma=0.3)})
+    here = make_plan().mc(spec, n=14, seed=42)  # noqa: F821
+    assert line.split()[1] == _digest(here)
+
+
+# ------------------------------------------------------ numpy oracle ----
+def test_quantiles_and_attribution_match_numpy_oracle(plan):
+    n, seed = 256, 11
+    samples = sample_spec(plan, mc_spec(), n, seed)
+    jax_mc = plan.mc(mc_spec(), n=n, seed=seed)
+    rep_np = plan.sweep(plan.prepare(samples.scenarios), backend="numpy")
+    np_mc = mc_report_from_sweep(rep_np, samples)
+
+    # engines agree on the identical sample set to float tolerance
+    np.testing.assert_allclose(jax_mc.makespans, np_mc.makespans, rtol=1e-9)
+    for q in (0.5, 0.95, 0.99):
+        assert jax_mc.quantile(q) == pytest.approx(np_mc.quantile(q), rel=1e-9)
+    T = float(np.median(np_mc.makespans))
+    assert jax_mc.prob(makespan_le=T) == pytest.approx(
+        np_mc.prob(makespan_le=T), abs=1.5 / n)
+
+    # quantiles/SLO against plain-numpy recomputation (independent oracle)
+    assert np_mc.quantile(0.95) == float(np.quantile(rep_np.makespans, 0.95))
+    assert np_mc.prob(makespan_le=T) == float(
+        np.mean(rep_np.makespans <= T))
+
+    # attribution probabilities against a hand-rolled argmax oracle
+    S = rep_np.share_seconds
+    dom = np.argmax(S, axis=1)
+    by_key = {a.label: a for a in np_mc.attribution()}
+    for j, (p, _k, f) in enumerate(rep_np.factors):
+        a = by_key[f"{p}.{f}"]
+        assert a.p_dominant == pytest.approx(np.mean(dom == j))
+        assert a.p_active == pytest.approx(np.mean(S[:, j] > 0.0))
+        assert a.mean_seconds == pytest.approx(float(S[:, j].mean()))
+    # and the jax-backed probabilities agree with the numpy-backed ones
+    jx = {a.label: a.p_dominant for a in jax_mc.attribution()}
+    for lbl, a in by_key.items():
+        assert jx[lbl] == pytest.approx(a.p_dominant, abs=2.5 / n)
+
+
+# ------------------------------------------- sensitivity + SLO logic ----
+def test_sensitivity_finds_the_driving_axis(tiny):
+    # makespan = 100 / f_link exactly: link factor explains ~everything,
+    # the dummy second axis (a no-op data speed-up) explains ~nothing
+    spec = scenarios.override({"dl.link": dist.uniform(0.5, 2.0)},
+                              data={"dl.file": dist.uniform(0.99, 1.01)})
+    mc = tiny.mc(spec, n=512, seed=5)
+    sens = mc.sensitivity()
+    assert sens[0].axis == "dl.link"
+    assert sens[0].rho < -0.95          # monotone decreasing
+    assert sens[0].s1 > 0.8
+    weak = next(s for s in sens if s.axis == "dl.file")
+    assert weak.s1 < 0.1
+    # factors actually hit the engine: f=2 -> makespan 50, f=0.5 -> 200
+    f = mc.samples["dl.link"]
+    np.testing.assert_allclose(mc.makespans, 100.0 / f, rtol=1e-9)
+
+
+def test_slo_queries(tiny):
+    mc = tiny.mc({"dl.link": dist.uniform(0.5, 2.0)}, n=400, seed=2)
+    q95 = mc.quantile(0.95)
+    assert mc.prob(makespan_le=q95) >= 0.95
+    assert mc.prob(makespan_gt=q95) == pytest.approx(
+        1.0 - mc.prob(makespan_le=q95))
+    assert mc.quantiles() == {"p50": mc.p50, "p95": mc.p95, "p99": mc.p99}
+    with pytest.raises(ValueError, match="exactly one"):
+        mc.prob()
+    with pytest.raises(ValueError, match="exactly one"):
+        mc.prob(makespan_le=1.0, makespan_gt=2.0)
+
+
+def test_grid_with_dists_stratifies(tiny):
+    specs = scenarios.grid({"dl.link": [dist.uniform(0.5, 1.0),
+                                        dist.uniform(1.5, 2.0)]})
+    mc = tiny.mc(specs, n=10, seed=0)
+    assert mc.n == 10
+    f = mc.samples["dl.link"]
+    assert ((0.5 <= f[:5]) & (f[:5] < 1.0)).all()
+    assert ((1.5 <= f[5:]) & (f[5:] < 2.0)).all()
+    assert mc.report.labels[0].endswith("#0")
+
+
+def test_dist_ramp_axes(tiny):
+    spec = scenarios.ramp_resource("dl", "link", [0.0, 50.0],
+                                   [10.0, dist.uniform(2.0, 20.0)])
+    mc = tiny.mc(spec, n=32, seed=9)
+    assert [a.label for a in mc.axes] == ["dl.link[t=50]"]
+    assert mc.fallback_count == 0       # sampled ramps stay in class
+    assert set(mc.report.backends) == {"jax"}
+
+
+# ------------------------------------ fallback warning + shape census ----
+def test_mc_warns_once_with_rate(tiny):
+    cubic = PPoly(np.array([0.0]), [np.array([0.0, 0.0, 0.0, 1e-9])])
+    specs = [scenarios.override({"dl.link": dist.uniform(0.5, 2.0)},
+                                label="good"),
+             scenarios.override({"dl.link": dist.uniform(0.5, 2.0)},
+                                data={("dl", "file"): cubic}, label="bad")]
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        mc = tiny.mc(specs, n=10, seed=0)
+    fallback_warnings = [w for w in caught if "fell off" in str(w.message)]
+    assert len(fallback_warnings) == 1          # 5 off-class draws, ONE warning
+    msg = str(fallback_warnings[0].message)
+    assert "5/10" in msg and "50.00%" in msg
+    assert not any("outside the batched function class" in str(w.message)
+                   for w in caught)             # per-sweep warning swallowed
+    assert mc.fallback_count == 5
+    assert mc.fallback_rate == pytest.approx(0.5)
+    (reason, count), = mc.fallback_reasons().items()
+    assert count == 5 and "degree 3" in reason and "dl.file" in reason
+    s = mc.summary()
+    assert "50.00%" in s and "degree 3" in reason
+    # the underlying Report.summary carries rate + census too
+    rs = mc.report.summary()
+    assert "(50.00%)" in rs and "degree 3" in rs
+
+
+def test_clean_mc_summary_has_no_fallback_words(tiny):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        mc = tiny.mc({"dl.link": dist.uniform(0.5, 2.0)}, n=16, seed=0)
+    s = mc.summary()
+    assert "0 draws off the batched quadratic class" in s
+    assert "fallback" not in s and "loop" not in s
+
+
+# --------------------------------------------------- service routing ----
+def test_service_submit_mc_matches_plan_mc(tiny):
+    with AnalysisService(max_batch=16) as svc:   # forces 64/16 = 4 chunks
+        p = svc.compile(tiny)
+        mc = svc.submit_mc({"dl.link": dist.lognormal(sigma=0.2)},
+                           n=64, seed=3, plan=p).result(120)
+        snap = svc.snapshot()
+    ref = tiny.mc({"dl.link": dist.lognormal(sigma=0.2)}, n=64, seed=3)
+    assert _digest(mc) == _digest(ref)
+    np.testing.assert_array_equal(mc.report.share_seconds,
+                                  ref.report.share_seconds)
+    assert mc.report.factors == ref.report.factors
+    assert snap["requests"] == 4 and snap["scenarios"] == 64
+
+
+def test_online_reanalysis_mc(tiny):
+    from repro.analysis import OnlineReanalysis
+
+    live = OnlineReanalysis(tiny, scenarios.override({"dl.link": 1.0}))
+    live.ingest({"dl.link": 0.5})       # measured: link at half rate
+    mc = live.mc({"dl.file": dist.uniform(0.99, 1.01)}, n=16, seed=0)
+    # the tracked measured state (0.5x link => makespan 200) stays in effect
+    np.testing.assert_allclose(mc.makespans, 200.0, rtol=1e-6)
