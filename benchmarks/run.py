@@ -333,6 +333,66 @@ def bench_serve_coalesced():
             "per-request result == sequential plan.sweep, gated by tests)")
 
 
+def bench_serve_degraded():
+    """Chaos row (ISSUE 8): the coalesced 64-client batch with 4 poisoned
+    rows — the non-finite guard re-runs them on the numpy reference twin.
+
+    Same shape as ``serve_coalesced_b64`` but with a ``FaultPlan`` injecting
+    NaN into 4 of the 64 stacked rows every sweep, so the p50/p99 include
+    the degradation detection + ``pack.subset`` re-run + row merge.  The row
+    asserts exactly 4 degraded rows per round before timing; the headline is
+    the best round's p50 per-request latency, gated by ``--compare`` so the
+    degraded path cannot silently regress (nor can supervision overhead —
+    the healthy ``serve_coalesced_b64`` row is the control).
+    """
+    import warnings
+
+    from repro.analysis import scenarios as S
+    from repro.analysis.faults import FaultPlan
+    from repro.analysis.serve import AnalysisService
+    from repro.configs.paper_workflow import build_workflow
+
+    plan = build_workflow(0.5).compile()
+    N, poison = 64, (3, 17, 31, 45)
+    queries = [S.scale_resource("task1", "cpu", [float(f)])
+               for f in np.linspace(0.5, 4.0, N)]
+    rounds = 3 if QUICK else 6
+    best = None
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", UserWarning)  # the degrade warning
+        for _ in range(rounds + 1):  # +1 warmup round (jit compile)
+            svc = AnalysisService(autostart=False,
+                                  faults=FaultPlan(nan_rows=poison,
+                                                   nan_sweep=None))
+            svc.compile(plan)
+            done = [0.0] * N
+            futs = []
+            for i, scs in enumerate(queries):
+                fut = svc.submit(scs, plan=plan)
+                fut.add_done_callback(
+                    lambda _f, i=i: done.__setitem__(i, time.perf_counter()))
+                futs.append(fut)
+            t0 = time.perf_counter()
+            svc.start()
+            for fut in futs:
+                fut.result(timeout=600)
+            svc.close()
+            snap = svc.snapshot()
+            assert snap["sweeps"] == 1, f"expected ONE fused sweep: {snap}"
+            assert snap["degraded"] == len(poison), snap
+            lats = np.sort(np.asarray(done) - t0)
+            row = (float(np.quantile(lats, 0.5)),
+                   float(np.quantile(lats, 0.99)))
+            if best is None or row[0] < best[0]:
+                best = row
+    p50, p99 = best
+    return ("serve_degraded_b64", p50 * 1e6,
+            f"clients={N} poisoned_rows={len(poison)} degraded="
+            f"{len(poison)}/round: p50={p50 * 1e3:.2f}ms "
+            f"p99={p99 * 1e3:.2f}ms (numpy re-run of poisoned rows riding "
+            "one fused sweep, row parity gated by tests)")
+
+
 def bench_mc_quantiles():
     """Tentpole row (ISSUE 7): ``plan.mc`` — B=10k Monte Carlo draws of the
     paper workflow's default uncertainty model analyzed as ONE fused sweep
@@ -483,6 +543,7 @@ BENCHES = [
     bench_resweep_trace_ops,
     bench_sharded_resweep,
     bench_serve_coalesced,
+    bench_serve_degraded,
     bench_mc_quantiles,
     bench_fig8_structure,
     bench_perf_vs_des,

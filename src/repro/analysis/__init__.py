@@ -23,18 +23,21 @@ from .report import (BottleneckRow, FinishTimes, Report, concat_reports,
                      report_from_scalar)
 from .scenarios import (ScenarioSpec, grid, override, ramp_resource,
                         scale_resource, speed_up_data)
-from . import dist, scenarios
+from . import dist, faults, scenarios
+from .faults import FaultInjected, FaultPlan
 from .uncertainty import MCReport, run_mc, sample_spec
 from .plan import CompiledWorkflow, compile_workflow
-from .serve import (AnalysisService, OnlineReanalysis, ServiceStats,
-                    workflow_fingerprint)
+from .serve import (AnalysisService, DeadlineExceeded, OnlineReanalysis,
+                    Overloaded, ServiceClosed, ServiceCrashed, ServiceError,
+                    ServiceStats, workflow_fingerprint)
 
 __all__ = [
     "AnalysisService", "BottleneckFn", "BottleneckInterval", "BottleneckRow",
-    "CompiledWorkflow", "FinishTimes", "MCReport", "OnlineReanalysis",
-    "Report", "ScenarioPack", "ScenarioSpec", "ServiceStats",
-    "compile_workflow", "concat_reports", "derive_bottleneck_fn", "dist",
-    "grid", "override", "ramp_resource", "report_from_scalar", "run_mc",
-    "sample_spec", "scale_resource", "scenarios", "speed_up_data",
-    "workflow_fingerprint",
+    "CompiledWorkflow", "DeadlineExceeded", "FaultInjected", "FaultPlan",
+    "FinishTimes", "MCReport", "OnlineReanalysis", "Overloaded", "Report",
+    "ScenarioPack", "ScenarioSpec", "ServiceClosed", "ServiceCrashed",
+    "ServiceError", "ServiceStats", "compile_workflow", "concat_reports",
+    "derive_bottleneck_fn", "dist", "faults", "grid", "override",
+    "ramp_resource", "report_from_scalar", "run_mc", "sample_spec",
+    "scale_resource", "scenarios", "speed_up_data", "workflow_fingerprint",
 ]

@@ -167,6 +167,48 @@ class ScenarioPack:
                             _cache=self._cache)
 
     # ------------------------------------------------------------------
+    def subset(self, indices: Sequence[int]) -> "ScenarioPack":
+        """A row-subset copy: the selected scenarios only, no re-resolution.
+
+        Slices the packed override arrays (single-row base-input broadcasts
+        pass through untouched) and remaps the batched/loop routing — the
+        pack-level inverse of :meth:`Report.subset`.  The serving tier's
+        degradation guard uses this to re-run just the garbage rows on the
+        numpy reference engine at slice cost instead of re-preparing.
+        """
+        idx = [int(i) for i in indices]
+        if any(i < 0 or i >= self.B for i in idx):
+            raise ValueError(f"subset: scenario index out of range "
+                             f"(B={self.B}, got {idx})")
+        bat_pos = {i: p for p, i in enumerate(self.bat_idx)}
+        new_bat: list[int] = []
+        new_loop: list[int] = []
+        sel_rows: list[int] = []   # rows of the packed (B_batched, P) arrays
+        loop_reasons: dict[int, str] = {}
+        for j, i in enumerate(idx):
+            if i in bat_pos:
+                new_bat.append(j)
+                sel_rows.append(bat_pos[i])
+            else:
+                new_loop.append(j)
+                if i in self.loop_reasons:
+                    loop_reasons[j] = self.loop_reasons[i]
+        proc_args: dict[str, dict[str, dict[str, BPL]]] = {}
+        if new_bat:
+            proc_args = {
+                name: {grp: {k: bpl.row_subset(sel_rows)
+                             for k, bpl in grp_args.items()}
+                       for grp, grp_args in args.items()}
+                for name, args in self.proc_args.items()}
+        return ScenarioPack(plan=self.plan,
+                            labels=[self.labels[i] for i in idx],
+                            scenarios=[self.scenarios[i] for i in idx],
+                            bat_idx=new_bat, loop_idx=new_loop,
+                            reason=next(iter(loop_reasons.values()), None),
+                            proc_args=proc_args, loop_reasons=loop_reasons,
+                            shards=self.shards, ramps=self.ramps)
+
+    # ------------------------------------------------------------------
     def override(self, inputs: Mapping[Any, Any]) -> "ScenarioPack":
         """Delta re-pack: replace ONLY the named inputs, reuse everything else.
 

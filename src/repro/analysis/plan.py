@@ -455,15 +455,20 @@ class CompiledWorkflow:
         use_jax = backend == "jax" or (backend == "auto" and prepared)
         batched: dict[str, BatchProcResult] | None = None
         engine_used = "batched"
+        engine_fallback: str | None = None
         if bat_idx:
             try:
                 if use_jax:
                     try:
                         batched = self._run_pack_jax(pack)
                         engine_used = "jax"
-                    except UnsupportedScenario:
+                    except UnsupportedScenario as decline:
                         if backend == "jax":
                             raise
+                        # the compiled engine declined mid-sweep (e.g.
+                        # iteration-ladder exhaustion): the numpy reference
+                        # ran instead — surface WHY on the report
+                        engine_fallback = str(decline)
                         batched = self._run_pack_numpy(pack)
                 else:
                     batched = self._run_pack_numpy(pack)
@@ -486,8 +491,10 @@ class CompiledWorkflow:
                 f"function class fell back to the scalar loop backend "
                 f"({reason}); see Report.backends for the per-scenario "
                 "routing", UserWarning, stacklevel=2)
-        return self._merge(pack, bat_idx, batched, loop_runs, engine_used,
-                           loop_reasons)
+        rep = self._merge(pack, bat_idx, batched, loop_runs, engine_used,
+                          loop_reasons)
+        rep.engine_fallback = engine_fallback
+        return rep
 
     def _classify(self, sc: Scenario) -> str | None:
         """None when the scenario fits the lockstep engine, else the reason.

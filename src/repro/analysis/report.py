@@ -89,6 +89,11 @@ class Report:
     #: the offending input's degree/shape); None when nothing fell back
     fallback_reasons: dict[int, str] | None = field(
         default=None, repr=False, compare=False)
+    #: why the compiled jax engine declined the batched partition mid-sweep
+    #: (e.g. iteration-ladder exhaustion) and the numpy engine ran it
+    #: instead; None when the requested engine ran
+    engine_fallback: str | None = field(default=None, repr=False,
+                                        compare=False)
     _drill_cache: dict[int, dict[str, ProgressResult]] = field(
         default_factory=dict, repr=False, compare=False)
 
@@ -116,6 +121,36 @@ class Report:
             return []
         return [i for i, b in enumerate(self.backends) if b == "loop"]
 
+    @property
+    def degraded_indices(self) -> list[int]:
+        """Scenario indices the serving tier re-ran on the numpy reference
+        twin after the compiled engine produced garbage (see
+        ``AnalysisService`` "Engine degradation")."""
+        return [i for i, b in enumerate(self.backends) if b == "degraded"]
+
+    @property
+    def nonfinite_indices(self) -> list[int]:
+        """Rows whose makespan or any finish time is non-finite.
+
+        Note an ``inf`` makespan is a *legitimate* model output (the
+        scenario never finishes under its inputs); ``nan`` never is — see
+        :attr:`nan_indices` for the garbage-only set.
+        """
+        bad = ~np.isfinite(self.makespans)
+        for arr in self.finish.values():
+            bad = bad | ~np.isfinite(arr)
+        return [int(i) for i in np.nonzero(bad)[0]]
+
+    @property
+    def nan_indices(self) -> list[int]:
+        """Rows whose makespan or any finish time is NaN — unambiguous
+        engine garbage (a healthy engine returns finite times or ``inf``,
+        never NaN); the analysis service's non-finite guard keys on this."""
+        bad = np.isnan(self.makespans)
+        for arr in self.finish.values():
+            bad = bad | np.isnan(arr)
+        return [int(i) for i in np.nonzero(bad)[0]]
+
     def subset(self, indices: "Iterable[int]") -> "Report":
         """A row-subset copy of a batched report.
 
@@ -142,7 +177,8 @@ class Report:
             fallback_reasons=({j: self.fallback_reasons[int(i)]
                                for j, i in enumerate(idx)
                                if int(i) in self.fallback_reasons}
-                              if self.fallback_reasons else None) or None)
+                              if self.fallback_reasons else None) or None,
+            engine_fallback=self.engine_fallback)
 
     def summary(self) -> str:
         """Human-readable digest: backend routing (surfacing the
@@ -155,8 +191,16 @@ class Report:
         for b in self.backends:
             counts[b] = counts.get(b, 0) + 1
         routing = ", ".join(f"{counts[b]} {b}" for b in
-                            ("jax", "batched", "loop") if b in counts)
+                            ("jax", "batched", "degraded", "loop")
+                            if b in counts)
         lines = [f"sweep of {self.B} scenario(s) [{routing}]"]
+        deg = self.degraded_indices
+        if deg:
+            lines.append(
+                f"degraded: {len(deg)}/{self.B} scenario(s) re-ran on the "
+                "numpy reference engine after the compiled engine "
+                "misbehaved" + (f" ({self.engine_fallback})"
+                                if self.engine_fallback else ""))
         fb = self.fallback_indices
         if fb:
             shown = ", ".join(str(i) for i in fb[:10])
@@ -383,7 +427,9 @@ def concat_reports(reports: "Iterable[Report]") -> Report:
         factors=factors, share_seconds=secs, share_fractions=fracs,
         backends=[b for r in reps for b in r.backends],
         plan=plan, scenarios=scenarios if have_sc else None,
-        fallback_reasons=fallback_reasons or None)
+        fallback_reasons=fallback_reasons or None,
+        engine_fallback=next(
+            (r.engine_fallback for r in reps if r.engine_fallback), None))
 
 
 def report_from_scalar(results: dict[str, ProgressResult], order: list[str],

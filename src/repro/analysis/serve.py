@@ -30,21 +30,50 @@ into the front door of an analysis *service* built from three pieces:
   the ``ScenarioPack.override`` delta-re-pack primitive — predictions track
   the live run without ever re-preparing.
 
+A predictor wired into a live scheduler must degrade, not crash or hang,
+so the serving tier makes four **operational guarantees** (each one
+deterministically exercised by :mod:`repro.analysis.faults`):
+
+* **No stranded futures** — the worker loop runs under a supervisor: an
+  exception escaping the per-request guards fails every in-flight future
+  with a typed :class:`ServiceCrashed` (carrying the cause), restarts the
+  worker with a fresh queue drain, and counts the restart
+  (``stats.restarts``).  ``close()`` cancels anything still queued and
+  aggregate ``submit_mc`` futures resolve even when their chunk futures
+  were cancelled mid-flight.
+* **Deadlines** — ``submit(..., deadline_s=...)`` requests that expire
+  while queued are failed with :class:`DeadlineExceeded` *before* being
+  packed into a batch, so one slow client never wastes fused-sweep rows.
+* **Backpressure** — the queue is bounded (``max_pending``); the newest
+  request is rejected with a typed :class:`Overloaded` instead of growing
+  the queue without bound.  Failed queries are retried with bounded
+  exponential backoff whose jitter comes from an explicit seed
+  (``retry_seed``), never wall-clock randomness.
+* **Engine degradation** — fused-sweep rows with non-finite output
+  (NaN/Inf makespan or finish, or an iteration-ladder exhaustion inside
+  the compiled engine) are automatically re-run on the pinned numpy
+  reference twin; the downgrade lands in ``Report.backends`` (value
+  ``"degraded"``) and ``stats.degraded``, with ONE aggregated warning per
+  sweep — mirroring the scalar-fallback machinery.
+
 ::
 
     svc = AnalysisService(workflow)              # compiles + caches the plan
     fut = svc.submit(scenarios.grid({...}))      # coalesced with neighbors
     fut.result().makespans                       # this client's rows only
+    svc.submit(scs, deadline_s=0.5)              # fail fast past 500 ms
     live = svc.track(sweep_scenarios([0.5]))
     live.ingest({"dl1.link": measured_rate})     # delta re-pack + re-sweep
     svc.submit_mc(spec, n=10_000).result().p95   # Monte Carlo via the worker
-    svc.stats.latency_quantiles()                # (p50, p99) seconds
+    svc.snapshot()                               # counters incl. restarts,
+                                                 #   degraded, shed, expired
 """
 
 from __future__ import annotations
 
 import threading
 import time
+import warnings
 from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field
@@ -56,6 +85,7 @@ from repro.core.ppoly import PPoly
 from repro.core.workflow import Workflow
 from repro.sweep.batch import Scenario
 
+from .faults import FaultPlan
 from .pack import ScenarioPack
 from .plan import CompiledWorkflow, compile_workflow
 from .report import Report, concat_reports
@@ -63,8 +93,49 @@ from .scenarios import ScenarioSpec
 from .uncertainty import (DEFAULT_QUANTILES, MCReport, mc_report_from_sweep,
                           sample_spec)
 
-__all__ = ["AnalysisService", "OnlineReanalysis", "ServiceStats",
-           "workflow_fingerprint"]
+__all__ = ["AnalysisService", "DeadlineExceeded", "OnlineReanalysis",
+           "Overloaded", "ServiceClosed", "ServiceCrashed", "ServiceError",
+           "ServiceStats", "workflow_fingerprint"]
+
+
+# ---------------------------------------------------------------------------
+# typed error taxonomy (all RuntimeError, so pre-existing callers who catch
+# broadly keep working; see README "Operational guarantees")
+# ---------------------------------------------------------------------------
+
+class ServiceError(RuntimeError):
+    """Base of every error the serving tier raises on its own behalf.
+
+    Client-input errors (unknown process, out-of-class override, malformed
+    spec) keep their original types (usually ``ValueError``) — they describe
+    the *request*, not the service.
+    """
+
+
+class ServiceCrashed(ServiceError):
+    """The worker died (or the service closed) with this request in flight.
+
+    ``cause`` carries the exception that killed the worker — also chained
+    as ``__cause__`` so tracebacks show it.
+    """
+
+    def __init__(self, msg: str, cause: BaseException | None = None):
+        super().__init__(msg)
+        self.cause = cause
+        if cause is not None:
+            self.__cause__ = cause
+
+
+class DeadlineExceeded(ServiceError):
+    """The request's ``deadline_s`` passed before its sweep ran."""
+
+
+class Overloaded(ServiceError):
+    """The queue is full (``max_pending``); the newest request was shed."""
+
+
+class ServiceClosed(ServiceError):
+    """The service no longer accepts (or will never run) this request."""
 
 
 def _fp(fn: PPoly) -> tuple:
@@ -114,6 +185,14 @@ class ServiceStats:
     plan_misses: int = 0       #: plan-cache misses (fresh compiles)
     trace_hits: int = 0        #: engines shared via the level signature
     solo_retries: int = 0      #: requests re-run alone after a batch error
+    restarts: int = 0          #: worker crashes caught by the supervisor
+    degraded: int = 0          #: rows re-run on the numpy reference twin
+    retries: int = 0           #: backoff retries of failed solo requests
+    shed: int = 0              #: requests rejected by backpressure
+    deadline_expired: int = 0  #: requests failed before packing (deadline)
+    #: degradation-reason census (reason -> row count), service-cumulative —
+    #: the serving-tier analogue of ``Report.fallback_reasons``
+    degrade_reasons: dict = field(default_factory=dict)
     latencies_s: deque = field(default_factory=lambda: deque(maxlen=4096))
 
     def latency_quantiles(self, qs: Sequence[float] = (0.5, 0.99)
@@ -124,6 +203,37 @@ class ServiceStats:
         arr = np.asarray(self.latencies_s)
         return tuple(float(np.quantile(arr, q)) for q in qs)
 
+    def count_degraded(self, rows: int, reason: str) -> None:
+        self.degraded += rows
+        self.degrade_reasons[reason] = \
+            self.degrade_reasons.get(reason, 0) + rows
+
+    def snapshot(self) -> dict:
+        """A point-in-time dict of every counter (caller holds the service
+        lock), including the top degradation reasons in
+        ``Report.summary()`` census style."""
+        p50, p99 = self.latency_quantiles()
+        top = sorted(self.degrade_reasons.items(), key=lambda kv: -kv[1])[:3]
+        return {
+            "requests": self.requests,
+            "scenarios": self.scenarios,
+            "sweeps": self.sweeps,
+            "coalesced_batches": self.coalesced_batches,
+            "max_coalesced": self.max_coalesced,
+            "max_batch_B": self.max_batch_B,
+            "plan_hits": self.plan_hits,
+            "plan_misses": self.plan_misses,
+            "trace_hits": self.trace_hits,
+            "solo_retries": self.solo_retries,
+            "restarts": self.restarts,
+            "degraded": self.degraded,
+            "retries": self.retries,
+            "shed": self.shed,
+            "deadline_expired": self.deadline_expired,
+            "top_degrade_reasons": top,
+            "latency_p50_s": p50, "latency_p99_s": p99,
+        }
+
 
 @dataclass
 class _Request:
@@ -132,6 +242,11 @@ class _Request:
     t_submit: float
     scenarios: list | None = None      # coalescable what-if query
     pack: ScenarioPack | None = None   # pre-packed (online re-analysis)
+    deadline: float | None = None      # absolute perf_counter() deadline
+    retries: int = 0                   # backoff retries already spent
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
 
 
 def _pow2_bucket(b: int) -> int:
@@ -151,20 +266,38 @@ class AnalysisService:
     request of a drain before sweeping, trading latency for wider batches;
     the default 0 relies on natural batching (requests arriving while a
     sweep runs coalesce into the next one).
+
+    Fault-tolerance knobs:
+
+    * ``max_pending`` — queue bound; the newest request beyond it is shed
+      with :class:`Overloaded` (``None`` disables admission control),
+    * ``max_retries`` / ``retry_backoff_s`` / ``retry_seed`` — bounded
+      exponential-backoff retries of failed solo requests (jitter drawn
+      from the seeded generator, so retry timing is reproducible),
+    * ``faults`` — a :class:`~repro.analysis.faults.FaultPlan` test hook
+      injecting deterministic failures into the worker loop.
     """
 
     def __init__(self, workflow: Workflow | CompiledWorkflow | None = None, *,
                  backend: str = "auto", max_batch: int = 4096,
                  linger_s: float = 0.0, pad_pow2: bool = True,
-                 autostart: bool = True):
+                 autostart: bool = True, max_pending: int | None = 10_000,
+                 max_retries: int = 2, retry_backoff_s: float = 0.002,
+                 retry_seed: int = 0, faults: FaultPlan | None = None):
         self.backend = backend
         self.max_batch = int(max_batch)
         self.linger_s = float(linger_s)
         self.pad_pow2 = bool(pad_pow2)
+        self.max_pending = None if max_pending is None else int(max_pending)
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self._retry_rng = np.random.default_rng(retry_seed)
+        self._faults = faults
         self.stats = ServiceStats()
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
         self._queue: list[_Request] = []
+        self._inflight: list[_Request] = []   # worker-thread only
         self._plans: dict[tuple, CompiledWorkflow] = {}
         self._engines: dict[tuple, Any] = {}
         self._closed = False
@@ -179,29 +312,46 @@ class AnalysisService:
         """Start the worker (idempotent); queued requests drain immediately."""
         with self._lock:
             if self._closed:
-                raise RuntimeError("AnalysisService is closed")
+                raise ServiceClosed("AnalysisService is closed")
             if self._thread is None:
                 self._thread = threading.Thread(
                     target=self._worker, name="analysis-service", daemon=True)
                 self._thread.start()
         return self
 
-    def close(self) -> None:
-        """Stop accepting requests, drain the queue, join the worker."""
+    def close(self, drain: bool = True) -> None:
+        """Stop accepting requests, join the worker, strand NO future.
+
+        ``drain=True`` (default) lets the worker finish everything queued;
+        ``drain=False`` cancels queued requests immediately (their futures
+        report cancelled; aggregate ``submit_mc`` futures resolve with a
+        typed :class:`ServiceCrashed` — see :meth:`submit_mc`).  Either way
+        every future is resolved by the time ``close`` returns: anything
+        still queued afterwards (e.g. the worker was never started) is
+        cancelled too.
+        """
         with self._wake:
             if self._closed:
                 return
             self._closed = True
+            dropped: list[_Request] = []
+            if not drain:
+                dropped, self._queue = self._queue, []
             self._wake.notify_all()
             thread = self._thread
+        self._cancel_requests(dropped)
         if thread is not None:
             thread.join()
-        else:
-            # never started: fail the stranded futures instead of hanging
-            for req in self._queue:
-                req.future.set_exception(
-                    RuntimeError("AnalysisService closed before start()"))
-            self._queue.clear()
+        with self._wake:
+            leftovers, self._queue = self._queue, []
+        self._cancel_requests(leftovers)
+
+    @staticmethod
+    def _cancel_requests(reqs: list[_Request]) -> None:
+        for req in reqs:
+            if not req.future.done() and not req.future.cancel():
+                req.future.set_exception(ServiceClosed(
+                    "AnalysisService closed before the request ran"))
 
     def __enter__(self) -> "AnalysisService":
         return self
@@ -268,12 +418,18 @@ class AnalysisService:
 
     # -- queries ------------------------------------------------------------
     def submit(self, scenarios: Any, *, plan: CompiledWorkflow | None = None,
-               workflow: Workflow | None = None) -> "Future[Report]":
+               workflow: Workflow | None = None,
+               deadline_s: float | None = None) -> "Future[Report]":
         """Enqueue a what-if query; resolves to this client's :class:`Report`.
 
         ``scenarios`` is a single :class:`Scenario`/:class:`ScenarioSpec` or
         a sequence of them.  Everything queued for the same plan when the
         worker next drains is stacked into ONE fused sweep.
+
+        ``deadline_s`` bounds the request's total time in the service: if
+        it is still queued when the deadline passes, it fails with
+        :class:`DeadlineExceeded` *without* being packed into a batch.
+        Raises :class:`Overloaded` if the queue is at ``max_pending``.
         """
         plan = self._resolve_plan(plan, workflow)
         if isinstance(scenarios, (Scenario, ScenarioSpec)):
@@ -285,42 +441,65 @@ class AnalysisService:
             raise ValueError(
                 f"request of {len(scs)} scenarios exceeds max_batch="
                 f"{self.max_batch}")
-        return self._enqueue(_Request(plan=plan, future=Future(),
-                                      t_submit=time.perf_counter(),
-                                      scenarios=scs))
+        return self._enqueue_many([self._make_request(
+            plan, scenarios=scs, deadline_s=deadline_s)])[0]
 
-    def submit_pack(self, pack: ScenarioPack) -> "Future[Report]":
+    def submit_pack(self, pack: ScenarioPack, *,
+                    deadline_s: float | None = None) -> "Future[Report]":
         """Enqueue a prepared pack (online re-analysis path).
 
         Packs carry their own solver-ready arrays, so they run as their own
         fused call on the worker — serialized with, but not merged into,
         the coalesced what-if batches.
         """
-        return self._enqueue(_Request(plan=pack.plan, future=Future(),
-                                      t_submit=time.perf_counter(),
-                                      pack=pack))
+        return self._enqueue_many([self._make_request(
+            pack.plan, pack=pack, deadline_s=deadline_s)])[0]
 
-    def _enqueue(self, req: _Request) -> "Future[Report]":
+    def _make_request(self, plan: CompiledWorkflow, *,
+                      scenarios: list | None = None,
+                      pack: ScenarioPack | None = None,
+                      deadline_s: float | None = None) -> _Request:
+        now = time.perf_counter()
+        return _Request(plan=plan, future=Future(), t_submit=now,
+                        scenarios=scenarios, pack=pack,
+                        deadline=(None if deadline_s is None
+                                  else now + float(deadline_s)))
+
+    def _enqueue_many(self, reqs: list[_Request]) -> list[Future]:
+        """Admit a group of requests atomically (all queued or none)."""
         with self._wake:
             if self._closed:
-                raise RuntimeError("AnalysisService is closed")
-            self._queue.append(req)
-            self.stats.requests += 1
-            self.stats.scenarios += (len(req.scenarios) if req.scenarios
-                                     else req.pack.B)
+                raise ServiceClosed("AnalysisService is closed")
+            if self.max_pending is not None and \
+                    len(self._queue) + len(reqs) > self.max_pending:
+                self.stats.shed += len(reqs)
+                raise Overloaded(
+                    f"{len(self._queue)} request(s) already pending "
+                    f"(max_pending={self.max_pending}); request shed — "
+                    "retry with backoff or raise max_pending")
+            for req in reqs:
+                self.stats.requests += 1
+                if self._faults is not None and req.scenarios is not None:
+                    req.scenarios = self._faults.corrupt_request(
+                        self.stats.requests, req.scenarios)
+                self._queue.append(req)
+                self.stats.scenarios += (len(req.scenarios) if req.scenarios
+                                         else req.pack.B)
             self._wake.notify()
-        return req.future
+        return [req.future for req in reqs]
 
     def query(self, scenarios: Any, *, plan: CompiledWorkflow | None = None,
               workflow: Workflow | None = None,
+              deadline_s: float | None = None,
               timeout: float | None = None) -> Report:
         """Blocking :meth:`submit`."""
-        return self.submit(scenarios, plan=plan,
-                           workflow=workflow).result(timeout)
+        return self.submit(scenarios, plan=plan, workflow=workflow,
+                           deadline_s=deadline_s).result(timeout)
 
     def submit_mc(self, spec: Any, n: int = 10_000, *, seed: int = 0,
                   plan: CompiledWorkflow | None = None,
                   workflow: Workflow | None = None,
+                  deadline_s: float | None = None,
                   quantile_levels: Sequence[float] = DEFAULT_QUANTILES,
                   ) -> "Future[MCReport]":
         """Enqueue a Monte Carlo distribution query; resolves to an
@@ -333,16 +512,18 @@ class AnalysisService:
         plan cache, and fused XLA traces as the what-if traffic — and batch
         WITH it.  Chunk reports are stitched back together with
         :func:`~repro.analysis.report.concat_reports` when the last chunk
-        lands.
+        lands.  The chunks are admitted atomically (one :class:`Overloaded`
+        rejects the whole query), and the aggregate future ALWAYS resolves:
+        a chunk that fails, is cancelled by :meth:`close`, or dies in a
+        worker crash fails the aggregate with the typed cause.
         """
         plan = self._resolve_plan(plan, workflow)
         samples = sample_spec(plan, spec, n, seed)
-        chunk_futs: list[Future] = []
-        for lo in range(0, n, self.max_batch):
-            scs = samples.scenarios[lo:lo + self.max_batch]
-            chunk_futs.append(self._enqueue(
-                _Request(plan=plan, future=Future(),
-                         t_submit=time.perf_counter(), scenarios=scs)))
+        reqs = [self._make_request(
+                    plan, scenarios=samples.scenarios[lo:lo + self.max_batch],
+                    deadline_s=deadline_s)
+                for lo in range(0, n, self.max_batch)]
+        chunk_futs = self._enqueue_many(reqs)
         out: "Future[MCReport]" = Future()
         state = {"pending": len(chunk_futs)}
         state_lock = threading.Lock()
@@ -350,6 +531,13 @@ class AnalysisService:
         def _on_done(f: Future) -> None:
             with state_lock:
                 if out.done():
+                    return
+                if f.cancelled():
+                    # the close/crash path cancels queued chunks; the
+                    # aggregate must still resolve (typed, with the cause)
+                    out.set_exception(ServiceCrashed(
+                        "Monte Carlo chunk cancelled: the service closed "
+                        "or crashed before all draw chunks ran"))
                     return
                 exc = f.exception()
                 if exc is not None:
@@ -386,23 +574,36 @@ class AnalysisService:
     def snapshot(self) -> dict:
         """A consistent point-in-time copy of the service counters."""
         with self._lock:
-            p50, p99 = self.stats.latency_quantiles()
-            return {
-                "requests": self.stats.requests,
-                "scenarios": self.stats.scenarios,
-                "sweeps": self.stats.sweeps,
-                "coalesced_batches": self.stats.coalesced_batches,
-                "max_coalesced": self.stats.max_coalesced,
-                "max_batch_B": self.stats.max_batch_B,
-                "plan_hits": self.stats.plan_hits,
-                "plan_misses": self.stats.plan_misses,
-                "trace_hits": self.stats.trace_hits,
-                "solo_retries": self.stats.solo_retries,
-                "latency_p50_s": p50, "latency_p99_s": p99,
-            }
+            return self.stats.snapshot()
 
     # -- worker -------------------------------------------------------------
     def _worker(self) -> None:
+        """Supervisor: restart the drain loop whenever it dies.
+
+        Everything expected runs inside :meth:`_run_batch`'s per-request
+        guards; anything that still escapes (a bug, a
+        ``FaultPlan.kill_worker_at`` injection) would otherwise strand every
+        in-flight future forever.  The supervisor fails them with a typed
+        :class:`ServiceCrashed` carrying the cause, counts the restart, and
+        re-enters the loop with a fresh drain — queued requests and later
+        submissions keep being served.
+        """
+        while True:
+            try:
+                self._drain_loop()
+                return  # closed and drained: clean exit
+            except BaseException as e:  # noqa: BLE001 — supervision boundary
+                crashed, self._inflight = self._inflight, []
+                err = ServiceCrashed(
+                    f"analysis worker crashed: {e!r} (supervisor restarted "
+                    "the worker; resubmit if needed)", cause=e)
+                for req in crashed:
+                    if not req.future.done():
+                        req.future.set_exception(err)
+                with self._lock:
+                    self.stats.restarts += 1
+
+    def _drain_loop(self) -> None:
         while True:
             with self._wake:
                 while not self._queue and not self._closed:
@@ -417,12 +618,25 @@ class AnalysisService:
                 with self._wake:
                     batch.extend(self._queue)
                     self._queue = []
+            self._inflight = batch  # supervisor fails these on a crash
             self._run_batch(batch)
+            self._inflight = []
 
     def _run_batch(self, batch: list[_Request]) -> None:
+        if self._faults is not None:
+            self._faults.on_drain()  # may delay the drain or kill the worker
+        # deadline gate BEFORE packing: expired requests must not waste
+        # fused-sweep rows (their neighbors' batch shrinks instead)
+        now = time.perf_counter()
+        live: list[_Request] = []
+        for req in batch:
+            if req.expired(now):
+                self._expire(req)
+            else:
+                live.append(req)
         groups: dict[int, list[_Request]] = {}
         order: list[int] = []
-        for req in batch:
+        for req in live:
             key = id(req.plan)
             if key not in groups:
                 groups[key] = []
@@ -446,15 +660,94 @@ class AnalysisService:
             if chunk:
                 self._sweep_chunk(plan, chunk)
 
-    def _sweep_pack(self, plan: CompiledWorkflow, req: _Request) -> None:
-        try:
-            rep = plan.sweep(req.pack, backend=self.backend)
-        except Exception as e:  # noqa: BLE001 — fail THIS request only
-            req.future.set_exception(e)
-            return
-        self._finish(req, rep)
+    def _expire(self, req: _Request) -> None:
+        with self._lock:
+            self.stats.deadline_expired += 1
+        if not req.future.done():
+            req.future.set_exception(DeadlineExceeded(
+                f"request deadline passed after "
+                f"{time.perf_counter() - req.t_submit:.3f}s in the service "
+                "(expired before its sweep ran)"))
+
+    def _do_sweep(self, plan: CompiledWorkflow,
+                  pack: ScenarioPack, B_real: int) -> Report:
+        """One guarded fused sweep + fault hooks + the degradation guard."""
+        if self._faults is not None:
+            self._faults.before_sweep()
+        rep = plan.sweep(pack, backend=self.backend)
         with self._lock:
             self.stats.sweeps += 1
+        if self._faults is not None:
+            rep = self._faults.after_sweep(rep)
+        return self._degrade_guard(plan, pack, rep, B_real)
+
+    def _degrade_guard(self, plan: CompiledWorkflow, pack: ScenarioPack,
+                       rep: Report, B_real: int) -> Report:
+        """Non-finite guard on fused output: re-run garbage rows on the
+        numpy reference twin (see module docstring, "Engine degradation").
+
+        Only rows the compiled ``jax`` engine produced are guarded — the
+        numpy engine IS the reference, and loop rows already ran the exact
+        scalar solver.  The garbage test is NaN, not any-non-finite: an
+        ``inf`` makespan is a legitimate model output ("this scenario never
+        finishes"), bit-matched by the reference twin, so degrading it
+        would re-run and warn on every re-sweep of a healthy pack.  An
+        in-sweep engine decline (iteration-ladder exhaustion already re-ran
+        the whole batched partition on numpy inside ``plan.sweep``) is
+        recorded the same way via ``Report.engine_fallback``.
+        """
+        reasons: dict[str, int] = {}
+        relabel: list[int] = []
+        if rep.engine_fallback is not None:
+            for i in range(B_real):
+                if rep.backends[i] == "batched":
+                    relabel.append(i)
+            if relabel:
+                reasons[rep.engine_fallback] = len(relabel)
+        bad = [i for i in rep.nan_indices
+               if i < B_real and rep.backends[i] == "jax"]
+        if not bad and not relabel:
+            return rep
+        for i in relabel:
+            rep.backends[i] = "degraded"
+        out = rep
+        if bad:
+            for i in bad:
+                why = ("NaN makespan from fused engine"
+                       if np.isnan(float(rep.makespans[i]))
+                       else "NaN finish time from fused engine")
+                reasons[why] = reasons.get(why, 0) + 1
+            clean = plan.sweep(pack.subset(bad), backend="numpy")
+            clean.backends = ["degraded"] * len(bad)
+            bad_set = set(bad)
+            keep = [i for i in range(B_real) if i not in bad_set]
+            merged = (concat_reports([rep.subset(keep), clean]) if keep
+                      else clean)
+            # restore original row order: keep-rows first, then bad-rows
+            pos = {i: j for j, i in enumerate(keep)}
+            pos.update({i: len(keep) + j for j, i in enumerate(bad)})
+            out = merged.subset([pos[i] for i in range(B_real)])
+        n_rows = sum(reasons.values())
+        with self._lock:
+            for why, c in reasons.items():
+                self.stats.count_degraded(c, why)
+        top = ", ".join(f"{why} (x{c})" for why, c in
+                        sorted(reasons.items(), key=lambda kv: -kv[1]))
+        warnings.warn(
+            f"analysis service: {n_rows}/{B_real} row(s) degraded to the "
+            f"numpy reference engine [{top}]; see Report.backends "
+            "('degraded') and ServiceStats.degrade_reasons", UserWarning,
+            stacklevel=2)
+        return out
+
+    def _sweep_pack(self, plan: CompiledWorkflow, req: _Request) -> None:
+        try:
+            rep = self._do_sweep(plan, req.pack, req.pack.B)
+        except Exception as e:  # noqa: BLE001 — fail THIS request only
+            self._retry_or_fail(plan, req, e,
+                                lambda: self._sweep_pack(plan, req))
+            return
+        self._finish(req, rep)
 
     def _sweep_chunk(self, plan: CompiledWorkflow,
                      chunk: list[_Request]) -> None:
@@ -467,11 +760,12 @@ class AnalysisService:
             # replicate the last scenario and are never handed to a client
             pad = min(_pow2_bucket(B), self.max_batch) - B
         try:
-            rep = plan.sweep(plan.prepare(scs + [scs[-1]] * pad),
-                             backend=self.backend)
+            rep = self._do_sweep(plan, plan.prepare(scs + [scs[-1]] * pad), B)
         except Exception as e:  # noqa: BLE001
             if len(chunk) == 1:
-                chunk[0].future.set_exception(e)
+                req = chunk[0]
+                self._retry_or_fail(plan, req, e,
+                                    lambda: self._sweep_chunk(plan, [req]))
                 return
             # a poisoned query must not fail its batch neighbors: re-run
             # each request alone so only the culprit sees the error
@@ -486,18 +780,44 @@ class AnalysisService:
             self._finish(req, rep.subset(range(lo, hi)))
             lo = hi
         with self._lock:
-            self.stats.sweeps += 1
             self.stats.max_batch_B = max(self.stats.max_batch_B, B)
             if len(chunk) > 1:
                 self.stats.coalesced_batches += 1
                 self.stats.max_coalesced = max(self.stats.max_coalesced,
                                                len(chunk))
 
+    def _retry_or_fail(self, plan: CompiledWorkflow, req: _Request,
+                       exc: Exception, rerun) -> None:
+        """Bounded exponential-backoff retry of a failed solo request.
+
+        Backoff is ``retry_backoff_s * 2**attempt`` plus up to 25% jitter
+        drawn from the explicitly-seeded generator (reproducible runs, no
+        wall-clock randomness).  Typed service errors are never retried —
+        they describe a decision, not a transient fault.
+        """
+        if isinstance(exc, ServiceError) or req.retries >= self.max_retries:
+            req.future.set_exception(exc)
+            return
+        delay = (self.retry_backoff_s * (2 ** req.retries)
+                 * (1.0 + 0.25 * float(self._retry_rng.random())))
+        now = time.perf_counter()
+        if req.deadline is not None and now + delay > req.deadline:
+            req.future.set_exception(DeadlineExceeded(
+                f"request failed ({exc!r}) and its deadline leaves no room "
+                f"for the {delay * 1e3:.1f}ms retry backoff"))
+            return
+        req.retries += 1
+        with self._lock:
+            self.stats.retries += 1
+        time.sleep(delay)
+        rerun()
+
     def _finish(self, req: _Request, rep: Report) -> None:
         lat = time.perf_counter() - req.t_submit
         with self._lock:
             self.stats.latencies_s.append(lat)
-        req.future.set_result(rep)
+        if not req.future.done():
+            req.future.set_result(rep)
 
 
 class OnlineReanalysis:
@@ -532,13 +852,14 @@ class OnlineReanalysis:
         self.updates = 0
         self.report: Report | None = None
 
-    def ingest(self, deltas: Mapping[Any, Any] | None = None) -> Report:
+    def ingest(self, deltas: Mapping[Any, Any] | None = None, *,
+               timeout: float | None = None) -> Report:
         """Apply monitoring deltas (may be ``None`` for a plain refresh),
         re-sweep, and return the fresh :class:`Report`."""
         if deltas:
             self.pack = self.pack.override(deltas)
         if self._service is not None:
-            self.report = self._service.submit_pack(self.pack).result()
+            self.report = self._service.submit_pack(self.pack).result(timeout)
         else:
             self.report = self.plan.sweep(self.pack, backend=self._backend)
         self.updates += 1

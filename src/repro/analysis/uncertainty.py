@@ -475,6 +475,13 @@ class MCReport:
     def fallback_rate(self) -> float:
         return self.fallback_count / max(self.n, 1)
 
+    @property
+    def degraded_count(self) -> int:
+        """Draws the serving tier re-ran on the numpy reference twin after
+        the compiled engine produced garbage (``backends == "degraded"``) —
+        nonzero only for MC queries routed through ``AnalysisService``."""
+        return len(self.report.degraded_indices)
+
     def routing(self) -> dict[str, int]:
         """Draw counts per engine backend (jax / batched / loop)."""
         counts: dict[str, int] = {}
@@ -517,7 +524,7 @@ class MCReport:
             lines.append(f"sensitivity: {tops}")
         counts = self.routing()
         routed = ", ".join(f"{counts[b]} {b}" for b in
-                           ("jax", "batched") if b in counts)
+                           ("jax", "batched", "degraded") if b in counts)
         if self.fallback_count:
             reasons = "; ".join(f"{r} (x{c})" for r, c in
                                 sorted(self.fallback_reasons().items(),
@@ -530,6 +537,10 @@ class MCReport:
         else:
             lines.append(f"function-class routing: {routed}; "
                          "0 draws off the batched quadratic class")
+        if self.degraded_count:
+            lines.append(
+                f"degraded: {self.degraded_count}/{self.n} draw(s) re-ran "
+                "on the numpy reference engine (compiled engine garbage)")
         return "\n".join(lines)
 
 

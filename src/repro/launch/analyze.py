@@ -23,8 +23,10 @@ workflow and drives it two ways:
 from __future__ import annotations
 
 import argparse
+import sys
 import threading
 import time
+from concurrent.futures import CancelledError
 
 import numpy as np
 
@@ -67,13 +69,19 @@ def _load_phase(svc, plan, clients: int, queries: int) -> None:
                 scs = [ramp_resource("dl2", "link", [0.0, 200.0],
                                      [4e6 * rng.uniform(0.3, 1.0), 0.5e6])]
             t0 = time.perf_counter()
-            svc.query(scs, plan=plan, timeout=600)
+            try:
+                svc.query(scs, plan=plan, timeout=600)
+            except (CancelledError, RuntimeError):
+                return  # service shut down under us (Ctrl-C): stop quietly
             with lat_lock:
                 latencies.append(time.perf_counter() - t0)
 
     svc.query(scale_resource("task1", "cpu", [1.0]), plan=plan)  # warm jit
     t0 = time.perf_counter()
-    threads = [threading.Thread(target=client, args=(i,))
+    # daemon threads: a Ctrl-C shutdown must not hang the interpreter on
+    # clients still blocked in result() — close(drain=False) cancels their
+    # futures and daemonization covers any straggler at teardown
+    threads = [threading.Thread(target=client, args=(i,), daemon=True)
                for i in range(clients)]
     for t in threads:
         t.start()
@@ -149,8 +157,8 @@ def main(argv: list[str] | None = None) -> None:
     from repro.configs.paper_workflow import build_workflow
 
     args = build_parser().parse_args(argv)
-    with AnalysisService(backend=args.backend,
-                         linger_s=args.linger_ms / 1e3) as svc:
+    svc = AnalysisService(backend=args.backend, linger_s=args.linger_ms / 1e3)
+    try:
         plan = svc.compile(build_workflow(0.5))
         _load_phase(svc, plan, args.clients, args.queries)
         live = _online_phase(svc, plan, args.online_steps)
@@ -160,6 +168,19 @@ def main(argv: list[str] | None = None) -> None:
         print(f"[analyze] totals: requests={snap['requests']} "
               f"scenarios={snap['scenarios']} sweeps={snap['sweeps']} "
               f"plan_cache={snap['plan_hits']}h/{snap['plan_misses']}m")
+    except KeyboardInterrupt:
+        # graceful shutdown: cancel everything queued (clients see their
+        # futures cancelled and stop), print what was served, exit 130 —
+        # never hang on threads still waiting for results
+        snap = svc.snapshot()
+        print(f"\n[analyze] interrupted — cancelled the pending queue "
+              f"(served so far: requests={snap['requests']} "
+              f"sweeps={snap['sweeps']} restarts={snap['restarts']})",
+              file=sys.stderr)
+        svc.close(drain=False)
+        sys.exit(130)
+    finally:
+        svc.close()  # idempotent: no-op after the interrupt path
 
 
 if __name__ == "__main__":

@@ -68,6 +68,14 @@ class BatchProcResult:
         total = np.maximum(fin - self.t_start, 1e-12)
         return self.share_seconds / total[:, None]
 
+    def nan_mask(self) -> np.ndarray:
+        """(B,) bool: rows whose finish time is NaN — unambiguous engine
+        garbage (``inf`` is a legitimate "never finishes"; NaN never is).
+        Surfaces per-process on the engine result so the serving tier's
+        degradation guard and the chaos tests can attribute garbage rows
+        without re-deriving them from the merged report."""
+        return np.isnan(self.finish)
+
 
 def _res_tables(proc: Process):
     """Static per-resource tables: breakpoints, slopes, jump magnitudes."""

@@ -68,8 +68,18 @@ from repro.kernels.ppoly_eval.ref import PAD_START  # noqa: E402
 from .engine import BatchProcResult  # noqa: E402
 from .plin import BPL, UnsupportedScenario, compose_scalar  # noqa: E402
 
-__all__ = ["JaxSweepEngine", "LazyCeilings", "DEFAULT_ITER_CAP",
-           "MAX_ITER_CAP", "trace_report"]
+__all__ = ["IterationLadderExhausted", "JaxSweepEngine", "LazyCeilings",
+           "DEFAULT_ITER_CAP", "MAX_ITER_CAP", "trace_report"]
+
+
+class IterationLadderExhausted(UnsupportedScenario):
+    """The adaptive iteration ladder hit ``MAX_ITER_CAP`` and gave up.
+
+    A subclass of :class:`UnsupportedScenario`, so ``backend="auto"``
+    callers transparently fall back to the numpy reference engine; the
+    analysis service additionally records the decline as a degradation
+    (``Report.engine_fallback`` / ``ServiceStats.degrade_reasons``).
+    """
 
 
 class LazyCeilings:
@@ -1264,7 +1274,7 @@ class JaxSweepEngine:
                 break
             cap *= 2
             if cap > MAX_ITER_CAP:
-                raise UnsupportedScenario(
+                raise IterationLadderExhausted(
                     f"jax engine exceeded {MAX_ITER_CAP} lockstep iterations; "
                     "use the numpy backend for this workload")
         if first:

@@ -147,6 +147,14 @@ class BPL:
             return self.starts, self.c0, self.c1
         return self.starts, self.c0, self.c1, self.c2
 
+    def row_subset(self, idx: "np.ndarray | list[int]") -> "BPL":
+        """Rows ``idx`` of the batch.  Single-row batches pass through
+        unchanged — they are broadcasts, every row is the same function."""
+        if self.B == 1:
+            return self
+        sel = np.asarray(list(idx), dtype=int)
+        return BPL(*(a[sel] for a in self.arrays()))
+
     def kernel_args(self) -> tuple[np.ndarray, np.ndarray]:
         """Float32 ``(starts, coeffs)`` for the ``kernels/ppoly_eval`` ops —
         same layout, so no re-packing beyond the coefficient stack."""
