@@ -11,6 +11,7 @@ function, and bottleneck-gain estimates — all returning one `Report` type.
 """
 
 import time
+import warnings
 
 import numpy as np
 
@@ -59,8 +60,10 @@ for _ in range(reps):
     res = plan.sweep(scs)
 dt_plan = (time.perf_counter() - t0) / reps
 t0 = time.perf_counter()
-for _ in range(reps):
-    sweep.analyze(base, scs)  # the legacy shim: re-compiles every call
+with warnings.catch_warnings():          # the shim warns: it is deprecated
+    warnings.simplefilter("ignore", DeprecationWarning)
+    for _ in range(reps):
+        sweep.analyze(base, scs)  # the legacy shim: re-compiles every call
 dt_shim = (time.perf_counter() - t0) / reps
 print(f"resweep of 600 scenarios: compiled plan {dt_plan * 1e3:.1f} ms vs "
       f"legacy analyze {dt_shim * 1e3:.1f} ms "

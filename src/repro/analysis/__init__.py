@@ -11,33 +11,48 @@
     plan.gain(("task1", "cpu"))            # makespan won by relaxing it
     plan.mc(spec, n=10_000, seed=0)        # Monte Carlo: quantiles, SLOs,
                                            #   attribution probabilities
+    plan.optimize(space=space)             # gradient search for the best
+                                           #   allocation, fused-sweep steps
 
 Every query returns the same :class:`~repro.analysis.report.Report` type;
-see :mod:`repro.analysis.scenarios` for the scenario-builder DSL and
+see :mod:`repro.analysis.scenarios` for the scenario-builder DSL,
+:mod:`repro.analysis.optimize` for the differentiable-makespan search and
 :mod:`repro.analysis.plan` for what compilation precomputes.
 """
 
 from .bottleneck import BottleneckFn, BottleneckInterval, derive_bottleneck_fn
-from .pack import ScenarioPack
+from .pack import CapAxis, PwAxis, ScenarioPack, ThetaMap
 from .report import (BottleneckRow, FinishTimes, Report, concat_reports,
                      report_from_scalar)
 from .scenarios import (ScenarioSpec, grid, override, ramp_resource,
                         scale_resource, speed_up_data)
-from . import dist, faults, scenarios
+from . import dist, faults, optimize, scenarios
 from .faults import FaultInjected, FaultPlan
+from .optimize import OptimizeReport, Space, cap_space, mc_quantile
 from .uncertainty import MCReport, run_mc, sample_spec
 from .plan import CompiledWorkflow, compile_workflow
 from .serve import (AnalysisService, DeadlineExceeded, OnlineReanalysis,
                     Overloaded, ServiceClosed, ServiceCrashed, ServiceError,
                     ServiceStats, workflow_fingerprint)
 
+#: ``analysis.compile(workflow)`` — the front-door spelling of
+#: :func:`~repro.analysis.plan.compile_workflow`.
+compile = compile_workflow
+
 __all__ = [
-    "AnalysisService", "BottleneckFn", "BottleneckInterval", "BottleneckRow",
-    "CompiledWorkflow", "DeadlineExceeded", "FaultInjected", "FaultPlan",
-    "FinishTimes", "MCReport", "OnlineReanalysis", "Overloaded", "Report",
+    # the front door (the names the README teaches)
+    "compile", "Report", "MCReport", "OptimizeReport", "dist",
+    "grid", "override", "ramp_resource", "AnalysisService", "FaultPlan",
+    # optimizer surface
+    "Space", "cap_space", "mc_quantile", "optimize",
+    "CapAxis", "PwAxis", "ThetaMap",
+    # everything else stays importable under its old name
+    "BottleneckFn", "BottleneckInterval", "BottleneckRow",
+    "CompiledWorkflow", "DeadlineExceeded", "FaultInjected",
+    "FinishTimes", "OnlineReanalysis", "Overloaded",
     "ScenarioPack", "ScenarioSpec", "ServiceClosed", "ServiceCrashed",
     "ServiceError", "ServiceStats", "compile_workflow", "concat_reports",
-    "derive_bottleneck_fn", "dist", "faults", "grid", "override",
-    "ramp_resource", "report_from_scalar", "run_mc", "sample_spec",
-    "scale_resource", "scenarios", "speed_up_data", "workflow_fingerprint",
+    "derive_bottleneck_fn", "faults", "report_from_scalar", "run_mc",
+    "sample_spec", "scale_resource", "scenarios", "speed_up_data",
+    "workflow_fingerprint",
 ]

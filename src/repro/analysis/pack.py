@@ -36,7 +36,7 @@ from repro.core.ppoly import PPoly
 from repro.sweep.batch import Scenario, ScenarioBatch
 from repro.sweep.plin import BPL, UnsupportedScenario, is_batchable_resource
 
-__all__ = ["ScenarioPack"]
+__all__ = ["CapAxis", "PwAxis", "ScenarioPack", "ThetaMap"]
 
 
 def _copy_scenario(sc: Scenario) -> Scenario:
@@ -345,3 +345,170 @@ def _pack_proc_args(plan: Any, bats: list[Scenario],
                 args["res"][r] = plan._base_res_row[key]
         out[name] = args
     return out
+
+
+# ---------------------------------------------------------------------------
+# parameterized overrides: a flat theta vector mapped onto resource caps and
+# ramp slopes IN-TRACE — the pack axis behind plan.optimize() (no host
+# re-packing between candidate evaluations)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CapAxis:
+    """Multiplies one resource input's packed planes by ``scale(theta)``.
+
+    ``scale`` maps a flat ``theta`` vector (1-D array) to a scalar factor
+    using jax-traceable ops (plain arithmetic and ``jnp`` calls); it is
+    vmapped over the candidate batch inside the compiled sweep.  The factor
+    composes multiplicatively with whatever the pack rows already carry —
+    including Monte Carlo draws, which is what keeps common random numbers
+    intact under ``optimize(objective=mc_quantile(...))``.
+    """
+
+    proc: str
+    res: str
+    scale: Any  # Callable[[theta (K,)], scalar]
+
+
+@dataclass(frozen=True)
+class PwAxis:
+    """Rebuilds one resource input as a theta-dependent piecewise-linear
+    function: ``build(theta) -> (starts, c0, c1)``, each of length
+    ``pieces`` (jax-traceable; vmapped over the candidate batch), with
+    ``c0``/``c1`` the value/slope of each piece in LOCAL coordinates
+    ``u = t - start`` — the packed-array convention of
+    :class:`repro.sweep.plin.BPL`.
+
+    Breakpoints may depend on ``theta`` — the engine locates pieces by value
+    in-trace, so gradients flow through moving knots too (e.g. the Fig. 7
+    reallocation instant ``V / (theta * L)``).  Unlike :class:`CapAxis` this
+    REPLACES the slot's packed rows, so it cannot compose with Monte Carlo
+    draws on the same input (:func:`ThetaMap.validate_spec_overlap`).
+    """
+
+    proc: str
+    res: str
+    pieces: int
+    build: Any  # Callable[[theta (K,)], (starts, c0, c1)]
+
+
+class ThetaMap:
+    """Resolved theta axes of one plan: slot coordinates + the in-trace
+    applier handed to :meth:`repro.sweep.jax_engine.JaxSweepEngine.make_diff_run`.
+
+    Each axis targets one resource input ``proc.res``; resolution maps it to
+    its engine coordinates ``(level, slot, process-in-level)`` once, host-
+    side.  :meth:`apply` then edits the broadcast ``(Lr, Lp, B, P)`` input
+    planes inside the trace — a multiply for :class:`CapAxis`, a row
+    rebuild (widening the piece axis if needed) for :class:`PwAxis` — so a
+    whole optimizer step (multi-start × line-search candidates) is one
+    fused sweep.
+    """
+
+    def __init__(self, plan: Any, axes: Sequence[CapAxis | PwAxis]):
+        self.plan = plan
+        self.axes = tuple(axes)
+        self._by_level: dict[int, list[tuple[int, int, Any]]] = {}
+        seen: set[tuple[str, str]] = set()
+        for ax in self.axes:
+            key = (ax.proc, ax.res)
+            if key in seen:
+                raise ValueError(
+                    f"theta axes target {ax.proc}.{ax.res} more than once; "
+                    "fold the parameterization into one axis")
+            seen.add(key)
+            li, pi, ri = self._locate(plan, ax.proc, ax.res)
+            self._by_level.setdefault(li, []).append((ri, pi, ax))
+
+    @staticmethod
+    def _locate(plan: Any, proc: str, res: str) -> tuple[int, int, int]:
+        for li, names in enumerate(plan.levels):
+            if proc in names:
+                res_names = [lbl for (lbl, *_rest) in plan.res_tables[proc]]
+                if res not in res_names:
+                    raise KeyError(
+                        f"process {proc!r} has no resource {res!r} "
+                        f"(has: {', '.join(res_names) or 'none'})")
+                return li, list(names).index(proc), res_names.index(res)
+        raise KeyError(f"unknown process {proc!r} "
+                       f"(workflow has: {', '.join(plan.order)})")
+
+    def validate_spec_overlap(self, keys: Sequence[tuple[str, str]]) -> None:
+        """Reject :class:`PwAxis` targets that a Monte Carlo spec also
+        perturbs — the rebuild would silently overwrite the draws (a
+        :class:`CapAxis` composes multiplicatively and is fine)."""
+        perturbed = set(keys)
+        for ax in self.axes:
+            if isinstance(ax, PwAxis) and (ax.proc, ax.res) in perturbed:
+                raise ValueError(
+                    f"theta axis rebuilds {ax.proc}.{ax.res}, which the MC "
+                    "spec also perturbs; use a cap (scale) axis so the "
+                    "draws survive, or move the distribution elsewhere")
+
+    def apply(self, IR: tuple, li: int, theta: Any) -> tuple:
+        """In-trace hook: edit the level's broadcast resource planes.
+
+        ``IR`` is the ``(starts, c0, c1[, c2])`` tuple of ``(Lr, Lp, B, P)``
+        arrays (``c2`` present on quadratic/ramped traces), ``theta`` the
+        ``(B, K)`` candidate batch (row i parameterizes scenario row i).
+        Runs under jit/grad — host side effects only at construction.
+        """
+        ents = self._by_level.get(li)
+        if not ents:
+            return IR
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels.ppoly_eval.ref import PAD_START
+
+        s, *vals = IR                     # vals = [c0, c1] or [c0, c1, c2]
+        B = theta.shape[0]
+        for ri, pi, ax in ents:
+            if isinstance(ax, CapAxis):
+                m = jax.vmap(ax.scale)(theta)                       # (B,)
+                vals = [v.at[ri, pi].mul(m[:, None]) for v in vals]
+                continue
+            ss, v0, v1 = (jnp.atleast_2d(a)
+                          for a in jax.vmap(ax.build)(theta))       # (B, Pa)
+            Pa, P = ss.shape[-1], s.shape[-1]
+            if Pa > P:  # widen every slot of the level; pads never bind
+                pad = Pa - P
+
+                def wide(a, fill):
+                    return jnp.concatenate(
+                        [a, jnp.full(a.shape[:-1] + (pad,), fill)], -1)
+
+                s = wide(s, PAD_START)
+                vals = [wide(v, 0.0) for v in vals]
+                P = Pa
+            elif Pa < P:
+                ss = jnp.concatenate(
+                    [ss, jnp.full((B, P - Pa), PAD_START)], -1)
+                v0 = jnp.concatenate([v0, jnp.zeros((B, P - Pa))], -1)
+                v1 = jnp.concatenate([v1, jnp.zeros((B, P - Pa))], -1)
+            s = s.at[ri, pi].set(ss)
+            vals[0] = vals[0].at[ri, pi].set(v0)
+            vals[1] = vals[1].at[ri, pi].set(v1)
+            if len(vals) > 2:             # quadratic plane: rebuilt rows are
+                vals[2] = vals[2].at[ri, pi].set(jnp.zeros((B, P)))  # pw-linear
+        return (s, *vals)
+
+    def materialize(self, theta: np.ndarray, label: str | None = None) -> Any:
+        """The HOST-side twin of :meth:`apply`: one concrete scenario spec
+        at ``theta``, for the full-report sweep of an accepted optimum (and
+        for finite-difference validation against the regular engine)."""
+        from .scenarios import override
+
+        th = np.asarray(theta, np.float64)
+        res: dict[tuple[str, str], PPoly] = {}
+        for ax in self.axes:
+            if isinstance(ax, CapAxis):
+                base = self.plan.base_res[(ax.proc, ax.res)]
+                res[(ax.proc, ax.res)] = base * float(np.asarray(ax.scale(th)))
+            else:
+                ss, v0, v1 = (np.asarray(a, np.float64).reshape(-1)
+                              for a in ax.build(th))
+                res[(ax.proc, ax.res)] = PPoly(
+                    ss, [np.array([v0[i], v1[i]]) for i in range(len(ss))])
+        lab = label if label is not None else (
+            "theta[" + ", ".join(f"{v:.6g}" for v in th) + "]")
+        return override(resources=res, label=lab)

@@ -399,8 +399,42 @@ class CompiledWorkflow:
         """
         return ScenarioPack.build(self, scenario_list)
 
+    def optimize(self, objective: Any = "makespan", space: Any = None, *,
+                 constraints: Any = None, starts: int = 1, rungs: int = 8,
+                 max_iters: int = 25, max_evals: int | None = None,
+                 ftol: float = 1e-9, seed: int | None = None,
+                 deadline_s: float | None = None) -> Any:
+        """Search ``space`` for the allocation minimizing ``objective`` by
+        projected gradient descent over the differentiable fused sweep.
+
+        Every optimizer step evaluates its whole candidate ladder (line
+        search × multi-start) as ONE fused ``(B,)`` sweep, and gradients
+        come from ``jax.grad`` through the fixed-trip event loop — tens of
+        evaluations where the Fig. 7 grid needs 600::
+
+            from repro.analysis import optimize
+            space = optimize.cap_space(["task1.cpu", "dl1.link"],
+                                       lo=0.25, hi=4.0)
+            opt = plan.optimize(space=space)            # point makespan
+            opt = plan.optimize(                        # p95 under risk
+                optimize.mc_quantile(mc_spec(), q=0.95, n=256), space)
+            opt.theta, opt.value, opt.gain, opt.report
+
+        ``objective`` is ``"makespan"`` or an
+        :class:`~repro.analysis.optimize.mc_quantile` (common-random-number
+        scoring, bit-reproducible for fixed ``seed``).  Returns an
+        :class:`~repro.analysis.optimize.OptimizeReport`; see
+        :mod:`repro.analysis.optimize` for the search's knobs and contract.
+        """
+        from .optimize import run_optimize
+
+        return run_optimize(self, objective, space, constraints=constraints,
+                            starts=starts, rungs=rungs, max_iters=max_iters,
+                            max_evals=max_evals, ftol=ftol, seed=seed,
+                            deadline_s=deadline_s)
+
     def sweep(self, scenario_list: "Sequence[Scenario | ScenarioSpec] | ScenarioPack",
-              backend: str = "auto") -> Report:
+              *args, backend: str = "auto") -> Report:
         """Analyze B what-if scenarios in one batched pass.
 
         ``scenario_list`` is either a list of scenarios/specs or a
@@ -423,7 +457,22 @@ class CompiledWorkflow:
           out-of-class scenarios fall back to the scalar loop with one
           summary warning.  Per-scenario routing is recorded in
           ``Report.backends``.
+
+        ``backend`` is keyword-only (unified across the analysis surface);
+        the old positional form is accepted for one release with a
+        :class:`DeprecationWarning`.
         """
+        if args:
+            if len(args) > 1:
+                raise TypeError(
+                    f"sweep() takes one scenario list and keyword arguments "
+                    f"({len(args) + 1} positional arguments given)")
+            warnings.warn(
+                "plan.sweep(scenarios, backend) with a positional backend is "
+                "deprecated; pass backend as a keyword: "
+                "plan.sweep(scenarios, backend=...)",
+                DeprecationWarning, stacklevel=2)
+            backend = args[0]
         if backend not in SWEEP_BACKENDS:
             raise ValueError(f"unknown backend {backend!r} "
                              f"(expected {'|'.join(SWEEP_BACKENDS)})")

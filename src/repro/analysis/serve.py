@@ -86,6 +86,7 @@ from repro.core.workflow import Workflow
 from repro.sweep.batch import Scenario
 
 from .faults import FaultPlan
+from .optimize import OptimizeReport
 from .pack import ScenarioPack
 from .plan import CompiledWorkflow, compile_workflow
 from .report import Report, concat_reports
@@ -242,6 +243,7 @@ class _Request:
     t_submit: float
     scenarios: list | None = None      # coalescable what-if query
     pack: ScenarioPack | None = None   # pre-packed (online re-analysis)
+    optimize: dict | None = None       # plan.optimize kwargs (solo request)
     deadline: float | None = None      # absolute perf_counter() deadline
     retries: int = 0                   # backoff retries already spent
 
@@ -458,10 +460,11 @@ class AnalysisService:
     def _make_request(self, plan: CompiledWorkflow, *,
                       scenarios: list | None = None,
                       pack: ScenarioPack | None = None,
+                      optimize: dict | None = None,
                       deadline_s: float | None = None) -> _Request:
         now = time.perf_counter()
         return _Request(plan=plan, future=Future(), t_submit=now,
-                        scenarios=scenarios, pack=pack,
+                        scenarios=scenarios, pack=pack, optimize=optimize,
                         deadline=(None if deadline_s is None
                                   else now + float(deadline_s)))
 
@@ -483,8 +486,9 @@ class AnalysisService:
                     req.scenarios = self._faults.corrupt_request(
                         self.stats.requests, req.scenarios)
                 self._queue.append(req)
-                self.stats.scenarios += (len(req.scenarios) if req.scenarios
-                                         else req.pack.B)
+                self.stats.scenarios += (
+                    len(req.scenarios) if req.scenarios is not None
+                    else req.pack.B if req.pack is not None else 1)
             self._wake.notify()
         return [req.future for req in reqs]
 
@@ -496,11 +500,57 @@ class AnalysisService:
         return self.submit(scenarios, plan=plan, workflow=workflow,
                            deadline_s=deadline_s).result(timeout)
 
+    def submit_optimize(self, objective: Any = "makespan", space: Any = None,
+                        *, constraints: Any = None, starts: int = 1,
+                        rungs: int = 8, max_iters: int = 25,
+                        max_evals: int | None = None, ftol: float = 1e-9,
+                        seed: int | None = None,
+                        plan: CompiledWorkflow | None = None,
+                        workflow: Workflow | None = None,
+                        deadline_s: float | None = None,
+                        ) -> "Future[OptimizeReport]":
+        """Enqueue a gradient allocation search; resolves to the
+        :class:`~repro.analysis.optimize.OptimizeReport` that a local
+        ``plan.optimize`` call with the same arguments returns — the search
+        is deterministic (no wall-clock or unseeded randomness), so results
+        are IDENTICAL either way; the service adds sharing of the worker,
+        plan cache, and compiled traces.
+
+        Runs as a solo request on the worker (optimizer steps are already
+        internally batched fused sweeps — there is nothing to coalesce
+        with).  ``deadline_s`` bounds queue time AND search time: the
+        remaining budget is handed to the optimizer, which aborts with
+        :class:`DeadlineExceeded` mid-search when it runs out.
+        """
+        plan = self._resolve_plan(plan, workflow)
+        kw = dict(objective=objective, space=space, constraints=constraints,
+                  starts=starts, rungs=rungs, max_iters=max_iters,
+                  max_evals=max_evals, ftol=ftol, seed=seed)
+        return self._enqueue_many([self._make_request(
+            plan, optimize=kw, deadline_s=deadline_s)])[0]
+
+    def query_optimize(self, objective: Any = "makespan", space: Any = None,
+                       *, constraints: Any = None, starts: int = 1,
+                       rungs: int = 8, max_iters: int = 25,
+                       max_evals: int | None = None, ftol: float = 1e-9,
+                       seed: int | None = None,
+                       plan: CompiledWorkflow | None = None,
+                       workflow: Workflow | None = None,
+                       deadline_s: float | None = None,
+                       timeout: float | None = None) -> "OptimizeReport":
+        """Blocking :meth:`submit_optimize`."""
+        return self.submit_optimize(
+            objective, space, constraints=constraints, starts=starts,
+            rungs=rungs, max_iters=max_iters, max_evals=max_evals, ftol=ftol,
+            seed=seed, plan=plan, workflow=workflow,
+            deadline_s=deadline_s).result(timeout)
+
     def submit_mc(self, spec: Any, n: int = 10_000, *, seed: int = 0,
                   plan: CompiledWorkflow | None = None,
                   workflow: Workflow | None = None,
                   deadline_s: float | None = None,
                   quantile_levels: Sequence[float] = DEFAULT_QUANTILES,
+                  max_batch: int | None = None,
                   ) -> "Future[MCReport]":
         """Enqueue a Monte Carlo distribution query; resolves to an
         :class:`~repro.analysis.uncertainty.MCReport`.
@@ -516,13 +566,19 @@ class AnalysisService:
         rejects the whole query), and the aggregate future ALWAYS resolves:
         a chunk that fails, is cancelled by :meth:`close`, or dies in a
         worker crash fails the aggregate with the typed cause.
+
+        ``max_batch`` overrides the service-wide chunk width for this one
+        query (``None`` keeps the service default).
         """
         plan = self._resolve_plan(plan, workflow)
-        samples = sample_spec(plan, spec, n, seed)
+        chunk_w = self.max_batch if max_batch is None else int(max_batch)
+        if chunk_w < 1:
+            raise ValueError(f"max_batch must be >= 1, got {chunk_w}")
+        samples = sample_spec(plan, spec, n, seed=seed)
         reqs = [self._make_request(
-                    plan, scenarios=samples.scenarios[lo:lo + self.max_batch],
+                    plan, scenarios=samples.scenarios[lo:lo + chunk_w],
                     deadline_s=deadline_s)
-                for lo in range(0, n, self.max_batch)]
+                for lo in range(0, n, chunk_w)]
         chunk_futs = self._enqueue_many(reqs)
         out: "Future[MCReport]" = Future()
         state = {"pending": len(chunk_futs)}
@@ -560,10 +616,15 @@ class AnalysisService:
     def query_mc(self, spec: Any, n: int = 10_000, *, seed: int = 0,
                  plan: CompiledWorkflow | None = None,
                  workflow: Workflow | None = None,
+                 deadline_s: float | None = None,
+                 quantile_levels: Sequence[float] = DEFAULT_QUANTILES,
+                 max_batch: int | None = None,
                  timeout: float | None = None) -> MCReport:
-        """Blocking :meth:`submit_mc`."""
+        """Blocking :meth:`submit_mc` (same keywords, plus ``timeout``)."""
         return self.submit_mc(spec, n, seed=seed, plan=plan,
-                              workflow=workflow).result(timeout)
+                              workflow=workflow, deadline_s=deadline_s,
+                              quantile_levels=quantile_levels,
+                              max_batch=max_batch).result(timeout)
 
     def track(self, scenarios: Any, *, plan: CompiledWorkflow | None = None,
               workflow: Workflow | None = None) -> "OnlineReanalysis":
@@ -646,7 +707,10 @@ class AnalysisService:
             reqs = groups[key]
             plan = reqs[0].plan
             packs = [r for r in reqs if r.pack is not None]
+            opts = [r for r in reqs if r.optimize is not None]
             coalescable = [r for r in reqs if r.scenarios is not None]
+            for req in opts:
+                self._run_optimize(plan, req)
             for req in packs:
                 self._sweep_pack(plan, req)
             chunk: list[_Request] = []
@@ -739,6 +803,33 @@ class AnalysisService:
             "('degraded') and ServiceStats.degrade_reasons", UserWarning,
             stacklevel=2)
         return out
+
+    def _run_optimize(self, plan: CompiledWorkflow, req: _Request) -> None:
+        """Run one gradient search inline on the worker.
+
+        The payload is the verbatim ``plan.optimize`` kwargs, so the result
+        is identical to a local call; only the deadline is service-owned —
+        the request's remaining budget becomes the optimizer's
+        ``deadline_s``, and an optimizer timeout surfaces as the same typed
+        :class:`DeadlineExceeded` the queue gate raises.
+        """
+        kw = dict(req.optimize)
+        objective, space = kw.pop("objective"), kw.pop("space")
+        if req.deadline is not None:
+            kw["deadline_s"] = max(req.deadline - time.perf_counter(), 0.0)
+        try:
+            rep = plan.optimize(objective, space, **kw)
+        except TimeoutError as e:
+            with self._lock:
+                self.stats.deadline_expired += 1
+            if not req.future.done():
+                req.future.set_exception(DeadlineExceeded(str(e)))
+            return
+        except Exception as e:  # noqa: BLE001 — fail THIS request only
+            self._retry_or_fail(plan, req, e,
+                                lambda: self._run_optimize(plan, req))
+            return
+        self._finish(req, rep)
 
     def _sweep_pack(self, plan: CompiledWorkflow, req: _Request) -> None:
         try:
@@ -880,7 +971,7 @@ class OnlineReanalysis:
         themselves scale the plan's base inputs.  With a service attached the
         fused sweep runs on its worker, sharing traces with live traffic.
         """
-        samples = sample_spec(self.plan, spec, n, seed)
+        samples = sample_spec(self.plan, spec, n, seed=seed)
         base = self.pack.scenarios[template]
         for sc in samples.scenarios:
             for k, fn in base.resource_inputs.items():

@@ -145,7 +145,8 @@ def _normalize_spec(spec: Any) -> list[ScenarioSpec]:
     return specs
 
 
-def sample_spec(plan: Any, spec: Any, n: int, seed: int = 0) -> MCSamples:
+def sample_spec(plan: Any, spec: Any, n: int, *args,
+                seed: int = 0) -> MCSamples:
     """Sample ``n`` concrete scenarios from a distribution-valued spec.
 
     ``spec`` is a :class:`ScenarioSpec` (from ``scenarios.override`` /
@@ -162,6 +163,16 @@ def sample_spec(plan: Any, spec: Any, n: int, seed: int = 0) -> MCSamples:
     """
     import jax
 
+    if args:  # seed is keyword-only now (unified across the analysis surface)
+        if len(args) > 1:
+            raise TypeError(
+                f"sample_spec() takes (plan, spec, n) and keyword arguments "
+                f"({len(args) + 3} positional arguments given)")
+        warnings.warn(
+            "sample_spec(plan, spec, n, seed) with a positional seed is "
+            "deprecated; pass seed as a keyword: sample_spec(..., seed=...)",
+            DeprecationWarning, stacklevel=2)
+        seed = args[0]
     if n < 1:
         raise ValueError(f"mc: need n >= 1 draws, got {n}")
     specs = _normalize_spec(spec)
@@ -590,7 +601,7 @@ def run_mc(plan: Any, spec: Any, n: int = 10_000, *, seed: int = 0,
     Warnings: at most ONE fallback warning fires per call, carrying the
     aggregate off-class rate, however many draws fell back.
     """
-    samples = sample_spec(plan, spec, n, seed)
+    samples = sample_spec(plan, spec, n, seed=seed)
     pack = plan.prepare(samples.scenarios)
     if shards is not None and int(shards) > 1:
         pack = pack.shard(int(shards))

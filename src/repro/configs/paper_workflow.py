@@ -172,6 +172,41 @@ def sweep_scenarios(fracs, *, video_bytes: float = VIDEO_BYTES):
     return out
 
 
+def fig7_space(*, lo: float = 0.02, hi: float = 0.98, x0: float = 0.5,
+               video_bytes: float = VIDEO_BYTES):
+    """The Fig. 7 prioritization as a differentiable 1-parameter search
+    space for ``plan.optimize()`` — the gradient counterpart of
+    :func:`sweep_scenarios`.
+
+    ``theta[0]`` is ``frac_task1``.  Both link inputs are rebuilt in-trace
+    (:class:`~repro.analysis.pack.PwAxis`): dl1 gets ``theta * LINK_BPS``,
+    dl2 a step from ``(1 - theta) * LINK_BPS`` up to the full link at dl1's
+    finish instant ``video_bytes / (theta * LINK_BPS)`` — a moving
+    breakpoint, which is exactly what the grid sweep cannot differentiate
+    and the theta axis can.
+    """
+    from repro.analysis.optimize import Space
+    from repro.analysis.pack import PwAxis
+
+    def dl1_build(th):
+        import jax.numpy as jnp
+        z = jnp.zeros((1,))
+        return z, jnp.reshape(th[0] * LINK_BPS, (1,)), z
+
+    def dl2_build(th):
+        import jax.numpy as jnp
+        f = th[0]
+        starts = jnp.stack([jnp.zeros(()), video_bytes / (f * LINK_BPS)])
+        c0 = jnp.stack([(1.0 - f) * LINK_BPS,
+                        jnp.full((), LINK_BPS)])
+        return starts, c0, jnp.zeros((2,))
+
+    return Space(
+        axes=(PwAxis("dl1", "link", 1, dl1_build),
+              PwAxis("dl2", "link", 2, dl2_build)),
+        lo=(lo,), hi=(hi,), x0=(x0,), names=("frac_task1",))
+
+
 def mc_spec(*, link_sigma: float = 0.15, cpu_sigma: float = 0.2):
     """The default uncertainty model of the Sect. 5 workflow for Monte Carlo
     analysis (``plan.mc(mc_spec())``).

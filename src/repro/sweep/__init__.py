@@ -66,12 +66,19 @@ def analyze(workflow: Workflow, scenarios: list[Scenario],
         once and sweep many instead::
 
             plan = workflow.compile()
-            res = plan.sweep(scenarios)
+            res = plan.sweep(scenarios, backend="auto")
 
-    Returns the unified :class:`repro.analysis.report.Report` (the old
-    ``SweepResult`` name is an alias) with per-scenario makespans, finish
-    times, bottleneck shares, rankings, and backend routing.
+    Returns the unified :class:`repro.analysis.report.Report` with
+    per-scenario makespans, finish times, bottleneck shares, rankings,
+    and backend routing.
     """
+    import warnings
+
     from repro.analysis import compile_workflow
 
+    warnings.warn(
+        "repro.sweep.analyze(workflow, scenarios) is deprecated and "
+        "re-compiles the workflow on every call; migrate with "
+        "`plan = workflow.compile(); plan.sweep(scenarios, backend=...)`.",
+        DeprecationWarning, stacklevel=2)
     return compile_workflow(workflow).sweep(scenarios, backend=backend)

@@ -208,10 +208,18 @@ def _eval_slope_quad_right(f, t):
 
 def _first_pos_root(a, b, c, tol=TIME_TOL):
     """Smallest root ``> tol`` of ``a·u² + b·u + c`` (inf when none) — the
-    jnp twin of :func:`repro.core.ppoly.first_pos_root` (stable q-branch)."""
+    jnp twin of :func:`repro.core.ppoly.first_pos_root` (stable q-branch).
+
+    The discriminant clamp floor is a denormal-range epsilon rather than an
+    exact 0.0: ``sqrt``'s VJP is ``ct / (2·sqrt)``, so a clamp landing on
+    exactly zero (every padded all-zero slot has ``disc == 0``) turns even a
+    zero cotangent into ``0/0 = NaN`` and poisons the reverse-mode makespan
+    gradient (:meth:`JaxSweepEngine.make_diff_run`).  The 1e-300 floor
+    perturbs forward values by at most 1e-150 — far below every solver
+    tolerance — and keeps the backward pass finite."""
     lin = jnp.where(b != 0.0, -c / jnp.where(b != 0.0, b, 1.0), _INF)
     disc = b * b - 4.0 * a * c
-    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    sq = jnp.sqrt(jnp.maximum(disc, 1e-300))
     q = -0.5 * (b + jnp.where(b >= 0.0, sq, -sq))
     r1 = jnp.where(a != 0.0, q / jnp.where(a != 0.0, a, 1.0), _INF)
     r2 = jnp.where(q != 0.0, c / jnp.where(q != 0.0, q, 1.0), _INF)
@@ -466,7 +474,8 @@ class _WorkflowSpec:
 # ---------------------------------------------------------------------------
 
 def _solve_level(ls: _LevelSpec, C, IR, t0, B: int, iter_cap: int,
-                 ramps: bool = False):
+                 ramps: bool = False, fixed_iters: bool = False,
+                 need_share: bool = True):
     """Mirror of ``engine.solve_batch``'s event loop, stacked over the
     ``Lp`` processes of one topology level, with fixed-size record buffers
     (two slots per iteration: burst-stall, then movement).
@@ -485,6 +494,17 @@ def _solve_level(ls: _LevelSpec, C, IR, t0, B: int, iter_cap: int,
     stays one closed-form :func:`_first_pos_root` instead of a division, so
     the per-iteration op count grows only by the two genuinely new event
     families (governor change, tangency tie-break).
+
+    ``fixed_iters`` swaps the ``lax.while_loop`` for a fixed-trip-count
+    ``lax.scan`` of exactly ``iter_cap`` body steps, which makes the whole
+    level REVERSE-MODE DIFFERENTIABLE (``while_loop`` has no transpose
+    rule).  The body is already a no-op once every scenario is done — every
+    state update is masked on ``act`` — so the extra trailing steps change
+    nothing except wall time; the iteration counter stops advancing when
+    nothing is active so the record scatter cannot clamp onto (and zero the
+    mask of) the last real slot.  ``need_share=False`` additionally skips
+    the bottleneck-share aggregation, which the differentiable makespan path
+    (:meth:`JaxSweepEngine.make_diff_run`) never reads.
     """
     Lp = len(ls.procs)
     nC, Lr, n_rb = ls.nC, ls.Lr, ls.n_rb
@@ -513,6 +533,7 @@ def _solve_level(ls: _LevelSpec, C, IR, t0, B: int, iter_cap: int,
         absorbed = st["absorbed"]                       # (Lr, Lp, B, n_rb)
         it = st["it"]
         act = active & (p < p_end - ftol)
+        any_act = jnp.any(act)
 
         # ---- ceilings at t: value/slope/next-break from ONE piece lookup ---
         tC = jnp.broadcast_to(t, (nC, Lp, B))
@@ -696,9 +717,14 @@ def _solve_level(ls: _LevelSpec, C, IR, t0, B: int, iter_cap: int,
                                                 p[None] - pb, 1.0))
                 upb = jnp.where(jnp.isfinite(pb), upb, _INF)
             else:
+                # pb is masked to 0 BEFORE the divide: an inf numerator in an
+                # unselected lane would still poison reverse-mode (the divide
+                # VJP multiplies the primal quotient by a zero cotangent —
+                # 0 * inf = nan) through the theta-dependent slope
+                pbs = jnp.where(jnp.isfinite(pb), pb, 0.0)
                 upb = jnp.where((slope[None] > 0) & jnp.isfinite(pb),
-                                (pb - p[None]) / jnp.where(slope[None] > 0,
-                                                           slope[None], 1.0),
+                                (pbs - p[None]) / jnp.where(slope[None] > 0,
+                                                            slope[None], 1.0),
                                 _INF)
                 upb = jnp.where(upb > TIME_TOL, upb, _INF)
             events = jnp.concatenate([events, t[None] + upb])
@@ -776,7 +802,15 @@ def _solve_level(ls: _LevelSpec, C, IR, t0, B: int, iter_cap: int,
         z = jnp.zeros((), it.dtype)
         rec = lax.dynamic_update_slice(st["rec"], block, (z, z, z, spi * it))
 
-        return {"it": it + 1, "t": t, "p": p, "finish": finish,
+        if fixed_iters:
+            # scan runs the body past quiescence; freeze the slot counter
+            # there so the (all-masked) block writes land on the next FREE
+            # slot instead of clamping onto — and zeroing the mask of — the
+            # last real record.  `any_act` mirrors the while_loop cond.
+            it_next = it + any_act.astype(it.dtype)
+        else:
+            it_next = it + 1
+        return {"it": it_next, "t": t, "p": p, "finish": finish,
                 "active": active, "absorbed": absorbed, "rec": rec}
 
     init = {
@@ -789,15 +823,20 @@ def _solve_level(ls: _LevelSpec, C, IR, t0, B: int, iter_cap: int,
                      else jnp.zeros((1, 1, 1, 1), bool)),
         "rec": jnp.zeros((nbuf, Lp, B, R)),
     }
-    st = lax.while_loop(cond, body, init)
+    if fixed_iters:
+        st, _ = lax.scan(lambda s, _x: (body(s), None), init, None,
+                         length=iter_cap)
+    else:
+        st = lax.while_loop(cond, body, init)
 
     p, t, finish, active = st["p"], st["t"], st["finish"], st["active"]
     late = active & (p >= p_end - ftol) & ~jnp.isfinite(finish)
     finish = jnp.where(late, t, finish)
     overflow = jnp.any(active & (p < p_end - ftol))
     rec = st["rec"]
-    share = _aggregate_shares(rec[0], rec[3].astype(jnp.int32), rec[4] > 0.5,
-                              finish, nC + Lr, R)
+    share = (_aggregate_shares(rec[0], rec[3].astype(jnp.int32), rec[4] > 0.5,
+                               finish, nC + Lr, R)
+             if need_share else None)
     # progress assembly happens in the runner: levels whose progress feeds
     # no later level join ONE deferred stacked assembly pass at the end
     return {"finish": finish, "rec": rec, "share": share,
@@ -1117,6 +1156,97 @@ class JaxSweepEngine:
                     }
             out["__overflow__"] = overflow
             return out
+
+        return run
+
+    # -- differentiable makespan path ---------------------------------------
+    def make_diff_run(self, B: int, iter_cap: int, ramps: bool,
+                      apply_theta=None):
+        """A REVERSE-MODE DIFFERENTIABLE ``makespan(theta)`` through the
+        level-fused event loop — the engine half of ``plan.optimize()``.
+
+        Returns ``run(largs, theta) -> (makespans (B,), overflow ())`` built
+        from the same level recursion as :meth:`_make_run`, with two
+        changes that make ``jax.grad`` work end to end:
+
+        * every level loop runs as a fixed-trip-count ``lax.scan``
+          (``fixed_iters=True`` in :func:`_solve_level`) — ``while_loop``
+          has no transpose rule — and skips the share aggregation the
+          makespan never reads;
+        * ``apply_theta(IR, level_index, theta)`` rescales / rebuilds
+          resource-input planes IN-TRACE from the flat ``theta`` batch
+          (see :class:`repro.analysis.pack.ThetaMap`), so every candidate
+          evaluation and its gradient ride one fused ``(B,)`` sweep with no
+          host re-packing.
+
+        Differentiability is the implicit-function-theorem kind: at generic
+        ``theta`` the event order and binding constraints are locally
+        constant, every event time is a closed form (division or
+        :func:`_first_pos_root`), and gradients flow through the selected
+        branches of the piecewise minima — exactly the quantity central
+        finite differences measure away from event-reorder points.  The
+        returned ``overflow`` flag is the caller's signal to climb the
+        iteration ladder (retrace with a doubled ``iter_cap``), with the
+        same :data:`MAX_ITER_CAP` ceiling as the regular solve.
+        """
+        spec = self.spec
+        arity = 4 if ramps else 3
+
+        def run(largs, theta):
+            finish_by, progress_by = {}, {}
+            overflow = jnp.zeros((), bool)
+            makespan = jnp.zeros((B,))
+            for li, (ls, la) in enumerate(zip(spec.levels, largs)):
+                Lp = len(ls.procs)
+                rows = []
+                for ps in ls.procs:
+                    t0p = jnp.zeros(B)
+                    for g in ps.gate_names:
+                        t0p = jnp.maximum(t0p, finish_by[g])
+                    rows.append(t0p)
+                t0 = jnp.stack(rows) if Lp > 1 else rows[0][None]
+                if la["C"] is not None:   # fully static level, pre-stacked
+                    C = tuple(jnp.broadcast_to(jnp.asarray(a),
+                                               (ls.nC, Lp, B, a.shape[-1]))
+                              for a in la["C"])
+                else:
+                    per = []
+                    for pi, ps in enumerate(ls.procs):
+                        cl = []
+                        for dep in ps.data_names:
+                            if dep in ps.edges:
+                                src, out_fn = ps.edges[dep]
+                                inner = _compose(out_fn, progress_by[src], B)
+                                cl.append(_compose(ps.reqs[dep], inner, B))
+                            else:
+                                cl.append(_bcast(la["ceil"][f"{pi}.{dep}"], B))
+                        if not cl:
+                            cl = [(jnp.zeros((B, 1)),
+                                   jnp.full((B, 1), ps.p_end),
+                                   jnp.zeros((B, 1)))]
+                        per.append(cl)
+                    C = _stack_level_ceils(per, ls.nC, B, arity)
+                IR = (tuple(jnp.broadcast_to(jnp.asarray(a),
+                                             (ls.Lr, Lp, B, a.shape[-1]))
+                            for a in la["IR"])
+                      if ls.Lr else None)
+                if IR is not None and apply_theta is not None:
+                    IR = apply_theta(IR, li, theta)
+                res = _solve_level(ls, C, IR, t0, B, iter_cap, ramps,
+                                   fixed_iters=True, need_share=False)
+                overflow = overflow | res["overflow"]
+                for pi, ps in enumerate(ls.procs):
+                    finish_by[ps.name] = res["finish"][pi]
+                makespan = jnp.maximum(makespan, res["finish"].max(0))
+                if ls.progress_inline:  # a later level composes against it
+                    rec = res["rec"]
+                    prog = _assemble_progress(
+                        rec[0], rec[1], rec[2], rec[4] > 0.5, t0,
+                        res["finish"], jnp.asarray(ls.p_end),
+                        rec.shape[-1], C2=rec[5] if ramps else None)
+                    for pi, ps in enumerate(ls.procs):
+                        progress_by[ps.name] = tuple(a[pi] for a in prog)
+            return makespan, overflow
 
         return run
 

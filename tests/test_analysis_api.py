@@ -63,7 +63,8 @@ def test_scalar_report_accessors(plan):
 def test_sweep_matches_legacy_and_loop(plan):
     scs = sweep_scenarios(np.linspace(0.1, 0.9, 9))
     rb = plan.sweep(scs, backend="batched")
-    shim = sweep.analyze(build_workflow(0.5), scs, backend="batched")
+    with pytest.deprecated_call():
+        shim = sweep.analyze(build_workflow(0.5), scs, backend="batched")
     rl = plan.sweep(scs, backend="loop")
     np.testing.assert_allclose(rb.makespan, shim.makespan, rtol=0, atol=0)
     np.testing.assert_allclose(rb.makespan, rl.makespan, rtol=1e-9)

@@ -1,0 +1,66 @@
+"""Unified-kwargs contract: the same knob has the same name — and is
+keyword-only — everywhere on the public analysis surface.
+
+The redesign PR unified ``seed`` / ``deadline_s`` / ``backend`` /
+``max_batch`` across ``plan.*``, the service ``submit*``/``query*`` family
+and the samplers; this test pins that contract so a future method can't
+drift (e.g. re-introduce a positional ``backend`` or rename ``seed`` to
+``rng``)."""
+
+import inspect
+
+from repro.analysis.optimize import run_optimize
+from repro.analysis.plan import CompiledWorkflow
+from repro.analysis.serve import AnalysisService, OnlineReanalysis
+from repro.analysis.uncertainty import run_mc, sample_spec
+
+UNIFIED = ("seed", "deadline_s", "backend", "max_batch")
+
+#: callable -> unified kwargs it must expose (all keyword-only)
+SURFACE = {
+    CompiledWorkflow.sweep: ("backend",),
+    CompiledWorkflow.mc: ("seed", "backend"),
+    CompiledWorkflow.optimize: ("seed", "deadline_s"),
+    run_optimize: ("seed", "deadline_s"),
+    run_mc: ("seed", "backend"),
+    sample_spec: ("seed",),
+    AnalysisService.__init__: ("backend", "max_batch"),
+    AnalysisService.submit: ("deadline_s",),
+    AnalysisService.submit_mc: ("seed", "deadline_s", "max_batch"),
+    AnalysisService.query_mc: ("seed", "deadline_s", "max_batch"),
+    AnalysisService.submit_optimize: ("seed", "deadline_s"),
+    AnalysisService.query_optimize: ("seed", "deadline_s"),
+    OnlineReanalysis.__init__: ("backend",),
+}
+
+
+def test_unified_kwargs_present_and_keyword_only():
+    for fn, required in SURFACE.items():
+        params = inspect.signature(fn).parameters
+        for kw in required:
+            assert kw in params, f"{fn.__qualname__} lost kwarg {kw!r}"
+            assert params[kw].kind is inspect.Parameter.KEYWORD_ONLY, \
+                f"{fn.__qualname__}({kw}=...) must be keyword-only"
+
+
+def test_no_unified_kwarg_is_ever_positional():
+    """Even where a unified knob is optional, it must never be acceptable
+    positionally — old positional forms go through the ``*args`` shim with a
+    DeprecationWarning, not through the signature."""
+    for fn in SURFACE:
+        for name, p in inspect.signature(fn).parameters.items():
+            if name in UNIFIED:
+                assert p.kind is inspect.Parameter.KEYWORD_ONLY, \
+                    f"{fn.__qualname__}: {name} must be keyword-only"
+
+
+def test_unified_defaults_agree():
+    """Shared knobs default the same way everywhere they appear (one mental
+    model: seed=0 unless the API treats None as 'inherit')."""
+    defaults = {}
+    for fn in SURFACE:
+        for name, p in inspect.signature(fn).parameters.items():
+            if name in ("deadline_s", "backend"):
+                defaults.setdefault(name, set()).add(p.default)
+    assert defaults["deadline_s"] == {None}
+    assert defaults["backend"] == {"auto"}

@@ -67,8 +67,8 @@ def test_golden_bottleneck_shares_scalar(frac):
 
 def test_golden_sweep_engine_reproduces_both_points():
     """The batched engine reproduces the same pinned numbers in one pass."""
-    base = build_workflow(0.5)
-    rb = sweep.analyze(base, sweep_scenarios([0.50, 0.95]), backend="batched")
+    rb = build_workflow(0.5).compile().sweep(sweep_scenarios([0.50, 0.95]),
+                                             backend="batched")
     for i, frac in enumerate((0.50, 0.95)):
         assert rb.makespan[i] == pytest.approx(GOLDEN_MAKESPAN[frac], rel=REL)
         for name, expect in GOLDEN_FINISH[frac].items():
@@ -81,8 +81,8 @@ def test_golden_sweep_engine_reproduces_both_points():
 
 def test_golden_fig7_improvement():
     """Paper Fig. 7 headline: ~32 % makespan reduction from 50 % -> 93 %."""
-    base = build_workflow(0.5)
-    rb = sweep.analyze(base, sweep_scenarios([0.50, 0.93]), backend="batched")
+    rb = build_workflow(0.5).compile().sweep(sweep_scenarios([0.50, 0.93]),
+                                             backend="batched")
     improvement = 1.0 - rb.makespan[1] / rb.makespan[0]
     assert improvement == pytest.approx(0.28994, abs=1e-4)
 
@@ -101,8 +101,10 @@ def test_golden_compiled_api_reproduces_pinned_numbers():
         assert shares[key] == pytest.approx(expect, rel=1e-6), key
 
     swept = plan.sweep(sweep_scenarios([0.50, 0.95]), backend="batched")
-    legacy = sweep.analyze(build_workflow(0.5), sweep_scenarios([0.50, 0.95]),
-                           backend="batched")
+    with pytest.deprecated_call():
+        legacy = sweep.analyze(build_workflow(0.5),
+                               sweep_scenarios([0.50, 0.95]),
+                               backend="batched")
     np.testing.assert_array_equal(swept.makespan, legacy.makespan)
     for i, frac in enumerate((0.50, 0.95)):
         assert swept.makespan[i] == pytest.approx(GOLDEN_MAKESPAN[frac], rel=REL)

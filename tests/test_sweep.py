@@ -1,6 +1,6 @@
 """Sweep engine tests: batched lockstep solver vs B independent scalar solves.
 
-The acceptance contract: ``sweep.analyze`` on a batch of B scenarios must
+The acceptance contract: ``plan.sweep`` on a batch of B scenarios must
 match B independent ``core.solver.solve`` runs — makespans, per-process
 finish times, AND bottleneck attribution — to float32-level tolerance,
 including jump (burst) and starvation edge cases.
@@ -9,14 +9,18 @@ including jump (burst) and starvation edge cases.
 import numpy as np
 import pytest
 
-from repro import sweep
+from repro import analysis, sweep
 from repro.configs.paper_workflow import build_workflow, sweep_scenarios
 from repro.core import DataDep, PPoly, Process, ResourceDep, Workflow
 
 RTOL = 1e-5  # float32-level agreement demanded by the acceptance criteria
 
 
-def _assert_match(rb: sweep.SweepResult, rl: sweep.SweepResult):
+def _sweep(wf, scs, backend="auto"):
+    return analysis.compile(wf).sweep(scs, backend=backend)
+
+
+def _assert_match(rb: sweep.Report, rl: sweep.Report):
     np.testing.assert_allclose(rb.makespan, rl.makespan, rtol=RTOL, atol=1e-9)
     for pn in rb.order:
         fb, fl = rb.finish[pn], rl.finish[pn]
@@ -52,16 +56,16 @@ def test_constant_rate_matches_scalar():
     scs = [sweep.Scenario(label=f"r{r}",
                           resource_inputs={("dl", "link"): PPoly.constant(r)})
            for r in (2.0, 5.0, 10.0, 40.0)]
-    rb = sweep.analyze(wf, scs, backend="batched")
-    rl = sweep.analyze(wf, scs, backend="loop")
+    rb = _sweep(wf, scs, backend="batched")
+    rl = _sweep(wf, scs, backend="loop")
     _assert_match(rb, rl)
     np.testing.assert_allclose(rb.finish["dl"], [500.0, 200.0, 100.0, 25.0])
 
 
 def test_starvation_window():
     wf = _single(PPoly.step([0, 10, 20], [10.0, 0.0, 10.0]))
-    rb = sweep.analyze(wf, [sweep.Scenario()], backend="batched")
-    rl = sweep.analyze(wf, [sweep.Scenario()], backend="loop")
+    rb = _sweep(wf, [sweep.Scenario()], backend="batched")
+    rl = _sweep(wf, [sweep.Scenario()], backend="loop")
     _assert_match(rb, rl)
     assert rb.finish["dl"][0] == pytest.approx(110.0)
     # the starved decade is attributed to the link
@@ -71,8 +75,8 @@ def test_starvation_window():
 
 def test_permanent_starvation_never_finishes():
     wf = _single(PPoly.step([0, 10], [10.0, 0.0]))
-    rb = sweep.analyze(wf, [sweep.Scenario()], backend="batched")
-    rl = sweep.analyze(wf, [sweep.Scenario()], backend="loop")
+    rb = _sweep(wf, [sweep.Scenario()], backend="batched")
+    rl = _sweep(wf, [sweep.Scenario()], backend="loop")
     assert not np.isfinite(rb.finish["dl"][0])
     assert not np.isfinite(rl.finish["dl"][0])
     _assert_match(rb, rl)
@@ -86,8 +90,8 @@ def test_mixed_attribution_then_permanent_starvation():
     wf.add(_dl_process(n), resources={"link": PPoly.step([0, 5], [400.0, 0.0])})
     # slow data feed makes the start data-limited; at t=5 the link dies
     wf.set_data_input("dl", "file", PPoly.linear(0.0, 20.0))
-    rb = sweep.analyze(wf, [sweep.Scenario()], backend="batched")
-    rl = sweep.analyze(wf, [sweep.Scenario()], backend="loop")
+    rb = _sweep(wf, [sweep.Scenario()], backend="batched")
+    rl = _sweep(wf, [sweep.Scenario()], backend="loop")
     assert not np.isfinite(rb.finish["dl"][0])
     _assert_match(rb, rl)
 
@@ -110,8 +114,8 @@ def test_burst_consumer_chain_and_gate():
     scs = [sweep.Scenario(label=f"r{r}",
                           resource_inputs={("dl", "link"): PPoly.constant(r)})
            for r in (5.0, 10.0, 20.0, 50.0)]
-    rb = sweep.analyze(wf, scs, backend="batched")
-    rl = sweep.analyze(wf, scs, backend="loop")
+    rb = _sweep(wf, scs, backend="batched")
+    rl = _sweep(wf, scs, backend="loop")
     _assert_match(rb, rl)
     np.testing.assert_allclose(rb.makespan, [255.0, 155.0, 105.0, 75.0])
 
@@ -128,8 +132,8 @@ def test_burst_resource_stall_absorption():
     scs = [sweep.Scenario(label=f"m{m}",
                           resource_inputs={("burst", "mem"): PPoly.constant(m)})
            for m in (0.5, 1.0, 2.0, 1000.0)]
-    rb = sweep.analyze(wf, scs, backend="batched")
-    rl = sweep.analyze(wf, scs, backend="loop")
+    rb = _sweep(wf, scs, backend="batched")
+    rl = _sweep(wf, scs, backend="loop")
     _assert_match(rb, rl)
 
 
@@ -187,8 +191,8 @@ def test_randomized_scenarios_match_scalar(seed):
     rng = np.random.default_rng(seed)
     wf = _random_workflow(rng)
     scs = _random_scenarios(rng, wf, 16)
-    rb = sweep.analyze(wf, scs, backend="batched")
-    rl = sweep.analyze(wf, scs, backend="loop")
+    rb = _sweep(wf, scs, backend="batched")
+    rl = _sweep(wf, scs, backend="loop")
     _assert_match(rb, rl)
 
 
@@ -203,8 +207,8 @@ def test_hypothesis_property_sweep_matches_scalar():
         rng = np.random.default_rng(seed)
         wf = _random_workflow(rng)
         scs = _random_scenarios(rng, wf, 4)
-        _assert_match(sweep.analyze(wf, scs, backend="batched"),
-                      sweep.analyze(wf, scs, backend="loop"))
+        _assert_match(_sweep(wf, scs, backend="batched"),
+                      _sweep(wf, scs, backend="loop"))
 
     run()
 
@@ -213,8 +217,8 @@ def test_hypothesis_property_sweep_matches_scalar():
 def test_paper_sweep_matches_scalar_loop():
     base = build_workflow(0.5)
     scs = sweep_scenarios(np.linspace(0.05, 0.95, 31))
-    rb = sweep.analyze(base, scs, backend="batched")
-    rl = sweep.analyze(base, scs, backend="loop")
+    rb = _sweep(base, scs, backend="batched")
+    rl = _sweep(base, scs, backend="loop")
     _assert_match(rb, rl)
     # ranking: best allocation sits in the >= 0.93 plateau (paper Fig. 7)
     best_label = rb.top_k(1)[0][1]
@@ -224,18 +228,18 @@ def test_paper_sweep_matches_scalar_loop():
 def test_paper_sweep_refined_recipe():
     base = build_workflow(0.5, recipe="refined")
     scs = sweep_scenarios(np.linspace(0.1, 0.9, 17))
-    _assert_match(sweep.analyze(base, scs, backend="batched"),
-                  sweep.analyze(base, scs, backend="loop"))
+    _assert_match(_sweep(base, scs, backend="batched"),
+                  _sweep(base, scs, backend="loop"))
 
 
 # ------------------------------------------------------- API / kernels -------
 def test_scenario_validation():
     wf = _single(PPoly.constant(10.0))
     with pytest.raises(ValueError, match="unknown process"):
-        sweep.analyze(wf, [sweep.Scenario(resource_inputs={("nope", "link"):
+        _sweep(wf, [sweep.Scenario(resource_inputs={("nope", "link"):
                                                            PPoly.constant(1.0)})])
     with pytest.raises(ValueError, match="no resource"):
-        sweep.analyze(wf, [sweep.Scenario(resource_inputs={("dl", "nope"):
+        _sweep(wf, [sweep.Scenario(resource_inputs={("dl", "nope"):
                                                            PPoly.constant(1.0)})])
 
 
@@ -243,10 +247,10 @@ def test_unsupported_scenario_falls_back_to_loop():
     # degree-2 resource rate: outside even the quadratic batched class
     # (quadratic rate x linear requirement -> cubic progress)
     wf = _single(PPoly(np.array([0.0]), [np.array([5.0, 0.1, 0.01])]))
-    rb = sweep.analyze(wf, [sweep.Scenario()], backend="auto")
+    rb = _sweep(wf, [sweep.Scenario()], backend="auto")
     assert rb.backend == "loop"
     with pytest.raises(sweep.UnsupportedScenario):
-        sweep.analyze(wf, [sweep.Scenario()], backend="batched")
+        _sweep(wf, [sweep.Scenario()], backend="batched")
     # loop backend agrees with a direct scalar analysis
     assert rb.makespan[0] == pytest.approx(wf.analyze().makespan)
 
@@ -255,7 +259,7 @@ def test_negative_ramp_resource_falls_back_to_loop():
     # a rate that goes negative is outside the model class of the batched
     # engines (progress would decrease) — scalar loop handles it as spec'd
     wf = _single(PPoly.pwlinear([0.0, 50.0], [10.0, -2.0]))
-    rb = sweep.analyze(wf, [sweep.Scenario()], backend="auto")
+    rb = _sweep(wf, [sweep.Scenario()], backend="auto")
     assert rb.backend == "loop"
 
 
@@ -263,16 +267,16 @@ def test_ramp_resource_is_batched_and_matches_scalar():
     """Piecewise-linear resource inputs are IN the batched class: quadratic
     progress pieces, zero scalar fallbacks (the tentpole contract)."""
     wf = _single(PPoly.pwlinear([0.0, 50.0], [5.0, 20.0]))
-    rb = sweep.analyze(wf, [sweep.Scenario()], backend="auto")
+    rb = _sweep(wf, [sweep.Scenario()], backend="auto")
     assert rb.backends == ["batched"]
-    rl = sweep.analyze(wf, [sweep.Scenario()], backend="loop")
+    rl = _sweep(wf, [sweep.Scenario()], backend="loop")
     _assert_match(rb, rl)
 
 
 def test_kernel_finish_times_agree():
     base = build_workflow(0.5)
     scs = sweep_scenarios(np.linspace(0.2, 0.9, 8))
-    rb = sweep.analyze(base, scs, backend="batched")
+    rb = _sweep(base, scs, backend="batched")
     for pn in rb.order:
         got = rb.kernel_finish_times(pn, use_pallas=False)
         np.testing.assert_allclose(got, rb.finish[pn], rtol=5e-5)
@@ -281,7 +285,7 @@ def test_kernel_finish_times_agree():
 def test_sample_progress_matches_scalar_curves():
     base = build_workflow(0.5)
     scs = sweep_scenarios([0.3, 0.6, 0.9])
-    rb = sweep.analyze(base, scs, backend="batched")
+    rb = _sweep(base, scs, backend="batched")
     ts = np.linspace(0.0, 400.0, 64)
     batch = sweep.ScenarioBatch(base, scs)
     for pn in rb.order:
@@ -296,7 +300,7 @@ def test_sample_progress_matches_scalar_curves():
 def test_data_ceiling_min_eval_attribution():
     base = build_workflow(0.5)
     scs = sweep_scenarios([0.4, 0.8])
-    rb = sweep.analyze(base, scs, backend="batched")
+    rb = _sweep(base, scs, backend="batched")
     ts = np.linspace(0.0, 300.0, 32)
     vals, arg = rb.data_ceiling("task3", ts, use_pallas=False)
     assert vals.shape == (2, 32) and arg.shape == (2, 32)

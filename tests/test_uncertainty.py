@@ -187,7 +187,7 @@ print("MC-SHARD-OK", h.hexdigest())
 # ------------------------------------------------------ numpy oracle ----
 def test_quantiles_and_attribution_match_numpy_oracle(plan):
     n, seed = 256, 11
-    samples = sample_spec(plan, mc_spec(), n, seed)
+    samples = sample_spec(plan, mc_spec(), n, seed=seed)
     jax_mc = plan.mc(mc_spec(), n=n, seed=seed)
     rep_np = plan.sweep(plan.prepare(samples.scenarios), backend="numpy")
     np_mc = mc_report_from_sweep(rep_np, samples)
