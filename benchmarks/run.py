@@ -369,6 +369,60 @@ def bench_serve_coalesced():
             "per-request result == sequential plan.sweep, gated by tests)")
 
 
+def bench_serve_warmstart():
+    """Durable-artifact row (ISSUE 10): time-to-first-report from a cold
+    compile (full XLA trace) vs from an AOT plan artifact
+    (:func:`~repro.analysis.artifacts.load_plan` — deserialize + execute,
+    zero re-traces).
+
+    A prior "serving process" authors the artifact once; each round then
+    measures (a) ``build_workflow().compile()`` + first fused sweep and
+    (b) ``load_plan(path)`` + the same sweep.  The headline ``us_per_call``
+    is the best warm time; the derived column carries the cold time and
+    the restart speedup.  Correctness is pinned inline the same way the
+    tests pin it: the warm engine's ``trace_count`` must stay 0 with
+    ``aot_hits >= 1``, and both paths must be bit-identical to the
+    authoring sweep.
+    """
+    import tempfile
+
+    from repro.analysis import load_plan
+    from repro.configs.paper_workflow import build_workflow, sweep_scenarios
+
+    fracs = [0.3, 0.5, 0.7, 0.9]
+    rounds = 2 if QUICK else 4
+    with tempfile.TemporaryDirectory() as d:
+        author = build_workflow(0.5).compile()
+        ref = author.sweep(author.prepare(sweep_scenarios(fracs)),
+                           backend="jax")
+        path = author.export(pathlib.Path(d) / "paper.bmplan")
+
+        cold_best = warm_best = float("inf")
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            plan = build_workflow(0.5).compile()
+            rep_c = plan.sweep(plan.prepare(sweep_scenarios(fracs)),
+                               backend="jax")
+            cold_best = min(cold_best, time.perf_counter() - t0)
+
+            t0 = time.perf_counter()
+            loaded = load_plan(path)
+            rep_w = loaded.sweep(loaded.prepare(sweep_scenarios(fracs)),
+                                 backend="jax")
+            warm_best = min(warm_best, time.perf_counter() - t0)
+
+            eng = loaded._jax_engine
+            assert eng.trace_count == 0, "warm start re-traced"
+            assert eng.aot_hits >= 1
+            np.testing.assert_array_equal(rep_c.makespans, ref.makespans)
+            np.testing.assert_array_equal(rep_w.makespans, ref.makespans)
+    return ("serve_warmstart", warm_best * 1e6,
+            f"artifact load+first sweep {warm_best * 1e3:.0f}ms vs cold "
+            f"compile+trace {cold_best * 1e3:.0f}ms -> "
+            f"{cold_best / warm_best:.1f}x faster restart (B={len(fracs)}, "
+            "0 re-traces, bit-identical, gated by tests)")
+
+
 def bench_serve_degraded():
     """Chaos row (ISSUE 8): the coalesced 64-client batch with 4 poisoned
     rows — the non-finite guard re-runs them on the numpy reference twin.
@@ -580,6 +634,7 @@ BENCHES = [
     bench_resweep_trace_ops,
     bench_sharded_resweep,
     bench_serve_coalesced,
+    bench_serve_warmstart,
     bench_serve_degraded,
     bench_mc_quantiles,
     bench_fig8_structure,

@@ -13,10 +13,14 @@
                                            #   attribution probabilities
     plan.optimize(space=space)             # gradient search for the best
                                            #   allocation, fused-sweep steps
+    plan.export("plan.bmplan")             # durable AOT artifact (no re-trace
+    plan = analysis.load_plan(path)        #   on load; see .artifacts)
 
 Every query returns the same :class:`~repro.analysis.report.Report` type;
 see :mod:`repro.analysis.scenarios` for the scenario-builder DSL,
-:mod:`repro.analysis.optimize` for the differentiable-makespan search and
+:mod:`repro.analysis.optimize` for the differentiable-makespan search,
+:mod:`repro.analysis.artifacts` / :mod:`repro.analysis.journal` for durable
+plan artifacts and crash-recoverable online state, and
 :mod:`repro.analysis.plan` for what compilation precomputes.
 """
 
@@ -26,14 +30,18 @@ from .report import (BottleneckRow, FinishTimes, Report, concat_reports,
                      report_from_scalar)
 from .scenarios import (ScenarioSpec, grid, override, ramp_resource,
                         scale_resource, speed_up_data)
-from . import dist, faults, optimize, scenarios
+from . import artifacts, dist, faults, journal, optimize, scenarios
+from .artifacts import (ArtifactError, ArtifactStore, ArtifactWarning,
+                        export_plan, load_plan)
 from .faults import FaultInjected, FaultPlan
+from .journal import Journal, JournalError, JournalWarning, recover_journal
 from .optimize import OptimizeReport, Space, cap_space, mc_quantile
 from .uncertainty import MCReport, run_mc, sample_spec
 from .plan import CompiledWorkflow, compile_workflow
-from .serve import (AnalysisService, DeadlineExceeded, OnlineReanalysis,
-                    Overloaded, ServiceClosed, ServiceCrashed, ServiceError,
-                    ServiceStats, workflow_fingerprint)
+from .serve import (AnalysisService, DeadlineExceeded, MalformedDeltaWarning,
+                    OnlineReanalysis, Overloaded, ServiceClosed,
+                    ServiceCrashed, ServiceError, ServiceStats,
+                    workflow_fingerprint)
 
 #: ``analysis.compile(workflow)`` — the front-door spelling of
 #: :func:`~repro.analysis.plan.compile_workflow`.
@@ -43,13 +51,17 @@ __all__ = [
     # the front door (the names the README teaches)
     "compile", "Report", "MCReport", "OptimizeReport", "dist",
     "grid", "override", "ramp_resource", "AnalysisService", "FaultPlan",
+    # durable artifacts + crash recovery
+    "ArtifactError", "ArtifactStore", "ArtifactWarning", "Journal",
+    "JournalError", "JournalWarning", "artifacts", "export_plan", "journal",
+    "load_plan", "recover_journal",
     # optimizer surface
     "Space", "cap_space", "mc_quantile", "optimize",
     "CapAxis", "PwAxis", "ThetaMap",
     # everything else stays importable under its old name
     "BottleneckFn", "BottleneckInterval", "BottleneckRow",
     "CompiledWorkflow", "DeadlineExceeded", "FaultInjected",
-    "FinishTimes", "OnlineReanalysis", "Overloaded",
+    "FinishTimes", "MalformedDeltaWarning", "OnlineReanalysis", "Overloaded",
     "ScenarioPack", "ScenarioSpec", "ServiceClosed", "ServiceCrashed",
     "ServiceError", "ServiceStats", "compile_workflow", "concat_reports",
     "derive_bottleneck_fn", "faults", "report_from_scalar", "run_mc",

@@ -1,0 +1,413 @@
+"""Durable AOT plan artifacts — export/load compiled plans without re-tracing.
+
+A restart of the analysis service used to throw away every XLA trace and
+re-pay compilation for workflows it had already served.  This module makes a
+:class:`~repro.analysis.plan.CompiledWorkflow` a *durable* object:
+
+* :func:`export_plan` (== ``plan.export(path)``) serializes the plan into a
+  single self-contained artifact file: the snapshotted workflow plus every
+  fused engine executable the plan has actually compiled, AOT-serialized
+  with ``jax.export`` per call signature ``(B, iter_cap, ramps, input
+  avals)``.
+* :func:`load_plan` rehydrates the artifact WITHOUT re-tracing: the
+  deserialized executables are adopted into a fresh
+  :class:`~repro.sweep.jax_engine.JaxSweepEngine` (along with the proven
+  iteration caps), so the first warm sweep runs the stored program —
+  bit-identical to a fresh ``compile()`` + sweep, with zero new traces
+  (pinned by the engine's ``trace_count``).
+* :class:`ArtifactStore` is a directory of artifacts keyed by workflow
+  fingerprint, written atomically (temp file + fsync + rename + directory
+  fsync) so a crash mid-write can never leave a half artifact under the
+  final name.  :class:`~repro.analysis.serve.AnalysisService` threads it
+  through the serving tier (write on first compile, warm-start on
+  ``start()``).
+
+Integrity and compatibility — every check degrades, never crashes:
+
+* the manifest carries a SHA-256 per member, a content hash over the
+  manifest itself, the workflow fingerprint digest and the
+  ``level_signature`` digest — any mismatch (bit rot, tampering, a torn
+  legacy write) raises a typed :class:`ArtifactError`, which
+  :func:`load_plan` turns into a logged re-compile when a fallback workflow
+  is available;
+* AOT executables are only adopted when the artifact's jax version, x64
+  flag and platform match the running process AND the rebuilt plan's level
+  signature matches the recorded digest — otherwise the plan still loads
+  and simply re-traces on first sweep (one :class:`ArtifactWarning`);
+* an unknown ``format`` (an artifact from a NEWER build, or a fault-injected
+  stale stamp) is rejected up front with a typed error, never half-parsed.
+
+The member digests are an *integrity* layer (pickle payloads are only
+unpickled after their SHA-256 verifies), not an authentication layer: treat
+artifact directories like any other build cache.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import pickle
+import struct
+import tempfile
+import warnings
+import zipfile
+from pathlib import Path
+from typing import TYPE_CHECKING, Any
+
+import jax
+
+if TYPE_CHECKING:
+    from .plan import CompiledWorkflow
+
+__all__ = ["ARTIFACT_FORMAT", "ARTIFACT_SUFFIX", "ArtifactError",
+           "ArtifactStore", "ArtifactWarning", "export_plan",
+           "fingerprint_digest", "load_plan"]
+
+#: on-disk format version; a loader only reads its own format (stale or
+#: future artifacts are rejected with a typed error and re-traced)
+ARTIFACT_FORMAT = 1
+ARTIFACT_SUFFIX = ".bmplan"
+
+_MANIFEST_MEMBER = "manifest.json"
+_WORKFLOW_MEMBER = "workflow.pkl"
+_ENGINES_MEMBER = "engines.pkl"
+
+
+class ArtifactError(RuntimeError):
+    """A plan artifact failed verification: corrupt bytes, digest or
+    fingerprint mismatch, unsupported format, or an unreadable container.
+
+    :func:`load_plan` converts this into a logged re-compile when the caller
+    provides a fallback ``workflow``; the serving tier counts it in
+    ``ServiceStats.artifact_errors`` and cold-compiles instead."""
+
+
+class ArtifactWarning(UserWarning):
+    """A plan artifact degraded gracefully (engines skipped, fallback
+    re-compile, failed persist) — the typed warning category every artifact
+    code path uses, so tests and operators can filter on it."""
+
+
+# ---------------------------------------------------------------------------
+# canonical digests (pickle-independent, stable across processes)
+# ---------------------------------------------------------------------------
+
+def _digest_update(h: Any, obj: Any) -> None:
+    if isinstance(obj, (tuple, list)):
+        h.update(b"(%d:" % len(obj))
+        for x in obj:
+            _digest_update(h, x)
+        h.update(b")")
+    elif isinstance(obj, bytes):
+        h.update(b"b%d:" % len(obj))
+        h.update(obj)
+    elif isinstance(obj, str):
+        e = obj.encode()
+        h.update(b"s%d:" % len(e))
+        h.update(e)
+    elif isinstance(obj, bool):
+        h.update(b"T" if obj else b"F")
+    elif isinstance(obj, int):
+        h.update(b"i%d;" % obj)
+    elif isinstance(obj, float):
+        h.update(b"f")
+        h.update(struct.pack("<d", obj))
+    elif obj is None:
+        h.update(b"N")
+    else:
+        raise TypeError(
+            f"cannot canonically digest node of type {type(obj).__name__}")
+
+
+def _digest_obj(obj: Any) -> str:
+    """Canonical SHA-256 over a nested tuple/bytes/scalar structure — the
+    digest of a workflow fingerprint or level signature, independent of
+    pickle protocol and dict-ordering details."""
+    h = hashlib.sha256()
+    _digest_update(h, obj)
+    return h.hexdigest()
+
+
+def fingerprint_digest(workflow: Any) -> str:
+    """SHA-256 hex digest of :func:`~repro.analysis.serve.workflow_fingerprint`
+    — the artifact filename stem and the load-time identity check."""
+    from .serve import workflow_fingerprint
+
+    wf = getattr(workflow, "workflow", workflow)  # accept plans too
+    return _digest_obj(workflow_fingerprint(wf))
+
+
+# ---------------------------------------------------------------------------
+# build / write
+# ---------------------------------------------------------------------------
+
+def build_artifact_bytes(plan: "CompiledWorkflow", *,
+                         _format: int = ARTIFACT_FORMAT) -> bytes:
+    """The complete artifact container as bytes (callers write atomically).
+
+    ``_format`` exists for fault injection only
+    (:attr:`~repro.analysis.faults.FaultPlan.stale_artifact_version`).
+    """
+    engine = plan._jax_engine
+    entries = engine.export_entries() if engine is not None else []
+    caps = engine.proven_caps_rows() if engine is not None else []
+    members = {
+        _WORKFLOW_MEMBER: pickle.dumps(plan.workflow, protocol=4),
+        _ENGINES_MEMBER: pickle.dumps(entries, protocol=4),
+    }
+    core = {
+        "format": int(_format),
+        "jax_version": jax.__version__,
+        "x64": bool(jax.config.jax_enable_x64),
+        "platform": str(jax.default_backend()),
+        "fingerprint": fingerprint_digest(plan),
+        "level_signature": _digest_obj(plan.level_signature),
+        "n_engines": len(entries),
+        "proven_caps": [list(row) for row in caps],
+        "members": {name: hashlib.sha256(data).hexdigest()
+                    for name, data in members.items()},
+    }
+    core["content_hash"] = hashlib.sha256(
+        json.dumps(core, sort_keys=True).encode()).hexdigest()
+    buf = io.BytesIO()
+    with zipfile.ZipFile(buf, "w", zipfile.ZIP_DEFLATED) as zf:
+        payloads = [(_MANIFEST_MEMBER,
+                     json.dumps(core, sort_keys=True, indent=1).encode())]
+        payloads += sorted(members.items())
+        for name, data in payloads:
+            # fixed timestamp: identical plans produce identical artifacts
+            info = zipfile.ZipInfo(name, date_time=(1980, 1, 1, 0, 0, 0))
+            info.compress_type = zipfile.ZIP_DEFLATED
+            zf.writestr(info, data)
+    return buf.getvalue()
+
+
+def _atomic_write(path: Path, data: bytes) -> None:
+    """temp file in the target directory + fsync + rename + dir fsync: the
+    final name either holds the complete artifact or does not exist."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent),
+                               prefix=path.name + ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    dfd = os.open(str(path.parent), os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+
+
+def export_plan(plan: "CompiledWorkflow", path: Any) -> Path:
+    """Serialize ``plan`` into a self-contained artifact at ``path``
+    (atomic write); the method spelling is ``plan.export(path)``."""
+    path = Path(path)
+    _atomic_write(path, build_artifact_bytes(plan))
+    return path
+
+
+# ---------------------------------------------------------------------------
+# verify / load
+# ---------------------------------------------------------------------------
+
+def _load_verified(path: Path):
+    """-> (workflow, manifest, entries, engine_skip_reason).
+
+    Raises :class:`ArtifactError` for anything that makes the artifact
+    unusable (container, manifest, format, workflow member).  Engine-member
+    failures are non-fatal: ``entries`` comes back ``None`` with the reason.
+    """
+    try:
+        zf = zipfile.ZipFile(path)
+    except (OSError, zipfile.BadZipFile) as e:
+        raise ArtifactError(
+            f"artifact {path} is not a readable container: {e}") from None
+    with zf:
+        try:
+            manifest = json.loads(zf.read(_MANIFEST_MEMBER).decode())
+        except Exception as e:  # noqa: BLE001 — any failure means corrupt
+            raise ArtifactError(
+                f"artifact {path}: manifest unreadable: {e}") from None
+        fmt = manifest.get("format")
+        if fmt != ARTIFACT_FORMAT:
+            raise ArtifactError(
+                f"artifact {path}: unsupported format {fmt!r} (this build "
+                f"reads format {ARTIFACT_FORMAT}); re-export the plan")
+        declared = manifest.get("content_hash")
+        core = {k: v for k, v in manifest.items() if k != "content_hash"}
+        actual = hashlib.sha256(
+            json.dumps(core, sort_keys=True).encode()).hexdigest()
+        if actual != declared:
+            raise ArtifactError(
+                f"artifact {path}: manifest content hash mismatch "
+                "(tampered or torn)")
+        digests = manifest.get("members", {})
+        try:
+            wf_blob = zf.read(_WORKFLOW_MEMBER)
+        except Exception as e:  # noqa: BLE001
+            raise ArtifactError(
+                f"artifact {path}: workflow member unreadable: {e}") from None
+        if hashlib.sha256(wf_blob).hexdigest() != digests.get(_WORKFLOW_MEMBER):
+            raise ArtifactError(
+                f"artifact {path}: workflow member digest mismatch "
+                "(corrupt bytes)")
+        try:
+            workflow = pickle.loads(wf_blob)
+        except Exception as e:  # noqa: BLE001
+            raise ArtifactError(
+                f"artifact {path}: workflow blob does not unpickle: "
+                f"{e}") from None
+        entries: list | None = None
+        skip: str | None = None
+        try:
+            eng_blob = zf.read(_ENGINES_MEMBER)
+            if hashlib.sha256(eng_blob).hexdigest() != \
+                    digests.get(_ENGINES_MEMBER):
+                raise ArtifactError("engine member digest mismatch")
+            entries = pickle.loads(eng_blob)
+        except Exception as e:  # noqa: BLE001 — engines are optional cargo
+            entries, skip = None, f"engine member unreadable ({e})"
+    return workflow, manifest, entries, skip
+
+
+def _compat_reason(manifest: dict) -> str | None:
+    """Why the recorded AOT executables cannot run in THIS process."""
+    if manifest.get("jax_version") != jax.__version__:
+        return (f"artifact jax {manifest.get('jax_version')!r} != running "
+                f"jax {jax.__version__!r}")
+    if bool(manifest.get("x64")) != bool(jax.config.jax_enable_x64):
+        return (f"artifact x64={manifest.get('x64')} != running "
+                f"x64={bool(jax.config.jax_enable_x64)}")
+    if manifest.get("platform") != str(jax.default_backend()):
+        return (f"artifact platform {manifest.get('platform')!r} != running "
+                f"platform {jax.default_backend()!r}")
+    return None
+
+
+def load_plan(path: Any, *, workflow: Any = None,
+              strict: bool = False) -> "CompiledWorkflow":
+    """Rehydrate a :class:`CompiledWorkflow` from a plan artifact.
+
+    On success the plan carries a fused engine pre-armed with the artifact's
+    AOT executables and proven iteration caps: sweeps run with ZERO new XLA
+    traces and are bit-identical to a fresh ``compile()``.
+
+    Verification failure (corrupt bytes, digest/fingerprint mismatch,
+    unsupported format) degrades: with a fallback ``workflow`` (a
+    :class:`~repro.core.workflow.Workflow` or an existing plan) the function
+    warns (:class:`ArtifactWarning`) and returns a fresh compile — a logged
+    re-trace, never a crash.  With no fallback, or ``strict=True``, the
+    typed :class:`ArtifactError` propagates.
+
+    Engine *incompatibility* (different jax version, x64 flag, platform, or
+    level signature) is softer still: the plan loads and simply re-traces
+    on first sweep, with one warning naming the reason.
+    """
+    from .plan import CompiledWorkflow, compile_workflow
+    from .serve import workflow_fingerprint
+
+    try:
+        wf, manifest, entries, skip = _load_verified(Path(path))
+        if _digest_obj(workflow_fingerprint(wf)) != manifest.get("fingerprint"):
+            raise ArtifactError(
+                f"artifact {path}: workflow fingerprint mismatch (the "
+                "stored workflow is not the one the manifest promises)")
+        plan = compile_workflow(wf)
+    except ArtifactError as e:
+        if strict or workflow is None:
+            raise
+        warnings.warn(
+            f"plan artifact failed verification ({e}); degrading to a "
+            "fresh compile (re-trace)", ArtifactWarning, stacklevel=2)
+        if isinstance(workflow, CompiledWorkflow):
+            return workflow
+        return compile_workflow(workflow)
+
+    # import the engine BEFORE judging compatibility: the import enables
+    # jax_enable_x64 (the mode every sweep of this plan will run under), so
+    # the x64 check must see post-import state or it rejects valid artifacts
+    # in processes that have not swept yet
+    from repro.sweep.jax_engine import JaxSweepEngine
+
+    if skip is None:
+        skip = _compat_reason(manifest)
+    if skip is None and _digest_obj(plan.level_signature) != \
+            manifest.get("level_signature"):
+        skip = "level signature mismatch (engine trace key changed)"
+    if skip is None and entries:
+        engine = JaxSweepEngine(plan)
+        try:
+            engine.adopt_exported(entries)
+            engine.adopt_proven_caps(manifest.get("proven_caps", []))
+            plan._jax_engine = engine
+        except Exception as e:  # noqa: BLE001 — stale blobs must not crash
+            skip = f"AOT executable deserialization failed ({e})"
+    if skip is not None:
+        warnings.warn(
+            f"plan artifact {path}: AOT engines skipped ({skip}); the plan "
+            "loaded and will re-trace on first sweep", ArtifactWarning,
+            stacklevel=2)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# the store
+# ---------------------------------------------------------------------------
+
+class ArtifactStore:
+    """A directory of plan artifacts, one per workflow fingerprint.
+
+    ``put`` writes atomically; ``scan`` lists what a warm start should load;
+    ``journal_dir`` is where the service parks per-track delta journals.
+    ``faults`` (set by the service from its :class:`FaultPlan`) lets the
+    chaos suite corrupt or version-skew the Nth write deterministically.
+    """
+
+    def __init__(self, root: Any, *, faults: Any = None):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.faults = faults
+        #: 1-based census of artifact writes (fault hooks key on it)
+        self.writes = 0
+
+    def path_for(self, plan_or_workflow: Any) -> Path:
+        return self.root / (fingerprint_digest(plan_or_workflow)[:16]
+                            + ARTIFACT_SUFFIX)
+
+    def put(self, plan: "CompiledWorkflow") -> Path:
+        """Atomically (re-)write ``plan``'s artifact; returns its path."""
+        self.writes += 1
+        fmt = ARTIFACT_FORMAT
+        if self.faults is not None:
+            fmt = self.faults.artifact_format(self.writes, fmt)
+        data = build_artifact_bytes(plan, _format=fmt)
+        if self.faults is not None:
+            data = self.faults.mutate_artifact(self.writes, data)
+        path = self.path_for(plan)
+        _atomic_write(path, data)
+        return path
+
+    def scan(self) -> list[Path]:
+        """Every artifact path in the store (sorted, deterministic)."""
+        return sorted(self.root.glob("*" + ARTIFACT_SUFFIX))
+
+    def journal_dir(self) -> Path:
+        d = self.root / "journals"
+        d.mkdir(parents=True, exist_ok=True)
+        return d
+
+    def __repr__(self) -> str:
+        return (f"ArtifactStore({str(self.root)!r}, "
+                f"artifacts={len(self.scan())})")

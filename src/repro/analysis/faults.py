@@ -20,6 +20,14 @@ four deterministic points of its worker loop —
   rows of the sweep output with NaN (``nan_rows`` — compiled-engine garbage
   the non-finite guard must catch and re-run on the numpy reference twin).
 
+The durability layer adds three more, consulted by
+:class:`~repro.analysis.artifacts.ArtifactStore` and
+:class:`~repro.analysis.journal.Journal`: ``corrupt_artifact`` (XOR-flip
+bytes of the Nth artifact write — load must reject and re-trace),
+``stale_artifact_version`` (stamp the Nth write with a future format — load
+must refuse it typed), and ``torn_journal_write`` (persist only a prefix of
+the Nth journal record and die — recovery must truncate and replay).
+
 Counters are plain ints advanced only by the single worker thread (and
 ``corrupt_request`` under the service lock), so a plan's firing order is
 bit-deterministic for a given request sequence: no wall-clock randomness,
@@ -88,6 +96,15 @@ class FaultPlan:
     nan_sweep: int | None = 1
     #: replace this accepted request's scenarios with ``malformed_spec()``
     malformed_request: int | None = None
+    #: XOR-flip bytes of this artifact-store write (1-based) — bit rot the
+    #: loader's digest verification must reject, degrading to a re-trace
+    corrupt_artifact: int | None = None
+    #: stamp this artifact-store write with a bogus future format version —
+    #: the loader must refuse it with a typed error, never half-parse it
+    stale_artifact_version: int | None = None
+    #: persist only a torn prefix of this journal append (1-based) and raise
+    #: as if the writer died mid-write — recovery must truncate and replay
+    torn_journal_write: int | None = None
 
     _drains: int = field(default=0, repr=False)
     _sweeps: int = field(default=0, repr=False)
@@ -128,3 +145,32 @@ class FaultPlan:
                 request_index == self.malformed_request:
             return [malformed_spec()]
         return scenarios
+
+    # -- durability hooks (called by ArtifactStore / Journal) --------------
+    def artifact_format(self, write_index: int, fmt: int) -> int:
+        """Artifact write ``write_index`` (1-based) is being stamped: maybe
+        stamp a bogus future format version instead."""
+        if self.stale_artifact_version is not None and \
+                write_index == self.stale_artifact_version:
+            return 999
+        return fmt
+
+    def mutate_artifact(self, write_index: int, data: bytes) -> bytes:
+        """Artifact write ``write_index`` is about to hit disk: maybe
+        XOR-flip a byte span in its middle (simulated bit rot; the write
+        itself still completes atomically)."""
+        if self.corrupt_artifact is not None and \
+                write_index == self.corrupt_artifact:
+            mid = len(data) // 2
+            span = data[mid:mid + 64]
+            data = data[:mid] + bytes(b ^ 0xFF for b in span) \
+                + data[mid + len(span):]
+        return data
+
+    def tear_journal(self, record_index: int) -> bool:
+        """Journal append ``record_index`` (1-based) is about to be written:
+        True means persist only a torn prefix and die (the
+        :class:`~repro.analysis.journal.Journal` raises after fsyncing the
+        partial record)."""
+        return self.torn_journal_write is not None and \
+            record_index == self.torn_journal_write

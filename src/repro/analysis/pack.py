@@ -27,6 +27,7 @@ engine; results are identical to single-device for any B.
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Any, Mapping, Sequence
 
@@ -94,6 +95,59 @@ class ScenarioPack:
                        for grp, grp_args in proc_args.items()}
                 for name, proc_args in self.proc_args.items()}
         return self._cache[key]
+
+    # ------------------------------------------------------------------
+    def state_digest(self) -> str:
+        """SHA-256 over everything that determines this pack's sweep output.
+
+        Covers the labels, the batched/loop routing, every packed host
+        array, and every scenario input function — so two packs with equal
+        digests produce bit-identical sweeps.  This is the equality witness
+        crash recovery uses: ``svc.recover(track_id)`` replays the journal
+        and asserts the rebuilt pack digests identically to the live one
+        (see :mod:`repro.analysis.journal`).
+        """
+        h = hashlib.sha256()
+
+        def feed(x: Any) -> None:
+            if isinstance(x, (tuple, list)):
+                h.update(b"(%d" % len(x))
+                for v in x:
+                    feed(v)
+                h.update(b")")
+            elif isinstance(x, dict):
+                h.update(b"{%d" % len(x))
+                for k in sorted(x, key=repr):
+                    feed(repr(k))
+                    feed(x[k])
+                h.update(b"}")
+            elif isinstance(x, np.ndarray):
+                h.update(f"a{x.shape}{x.dtype}".encode())
+                h.update(np.ascontiguousarray(x).tobytes())
+            elif isinstance(x, PPoly):
+                h.update(b"P")
+                feed((x.starts, x.coeffs))
+            elif isinstance(x, str):
+                h.update(b"s")
+                h.update(x.encode())
+            elif isinstance(x, (bool, int, float, np.generic)):
+                h.update(f"n{float(x)!r}".encode())
+            elif x is None:
+                h.update(b"N")
+            else:
+                h.update(f"o{x!r}".encode())
+
+        feed(self.labels)
+        feed(self.bat_idx)
+        feed(self.loop_idx)
+        feed(self.shards)
+        feed(self.ramps)
+        feed(self.host_args())
+        for sc in self.scenarios:
+            feed(sc.label)
+            feed(sc.resource_inputs)
+            feed(sc.data_inputs)
+        return h.hexdigest()
 
     # ------------------------------------------------------------------
     @property

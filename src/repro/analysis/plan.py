@@ -399,6 +399,22 @@ class CompiledWorkflow:
         """
         return ScenarioPack.build(self, scenario_list)
 
+    def export(self, path: Any) -> Any:
+        """Serialize this plan into a self-contained durable artifact.
+
+        The artifact bundles the snapshotted workflow with every fused
+        engine executable this plan has actually compiled (AOT-serialized
+        via ``jax.export``) plus the proven iteration caps, all under an
+        integrity-checked manifest.  ``analysis.load_plan(path)`` rehydrates
+        it in a later process WITHOUT re-tracing — warm sweeps are
+        bit-identical to a fresh ``compile()``.  Export a plan *after*
+        sweeping the shapes you want warm.  See
+        :mod:`repro.analysis.artifacts` for layout and compatibility rules.
+        """
+        from .artifacts import export_plan
+
+        return export_plan(self, path)
+
     def optimize(self, objective: Any = "makespan", space: Any = None, *,
                  constraints: Any = None, starts: int = 1, rungs: int = 8,
                  max_iters: int = 25, max_evals: int | None = None,

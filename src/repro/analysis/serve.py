@@ -77,6 +77,7 @@ import warnings
 from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Any, Iterable, Mapping, Sequence
 
 import numpy as np
@@ -85,6 +86,7 @@ from repro.core.ppoly import PPoly
 from repro.core.workflow import Workflow
 from repro.sweep.batch import Scenario
 
+from .artifacts import ArtifactError, ArtifactStore, ArtifactWarning, load_plan
 from .faults import FaultPlan
 from .optimize import OptimizeReport
 from .pack import ScenarioPack
@@ -94,9 +96,10 @@ from .scenarios import ScenarioSpec
 from .uncertainty import (DEFAULT_QUANTILES, MCReport, mc_report_from_sweep,
                           sample_spec)
 
-__all__ = ["AnalysisService", "DeadlineExceeded", "OnlineReanalysis",
-           "Overloaded", "ServiceClosed", "ServiceCrashed", "ServiceError",
-           "ServiceStats", "workflow_fingerprint"]
+__all__ = ["AnalysisService", "DeadlineExceeded", "MalformedDeltaWarning",
+           "OnlineReanalysis", "Overloaded", "ServiceClosed",
+           "ServiceCrashed", "ServiceError", "ServiceStats",
+           "workflow_fingerprint"]
 
 
 # ---------------------------------------------------------------------------
@@ -194,13 +197,26 @@ class ServiceStats:
     #: degradation-reason census (reason -> row count), service-cumulative —
     #: the serving-tier analogue of ``Report.fallback_reasons``
     degrade_reasons: dict = field(default_factory=dict)
+    warm_plans: int = 0        #: plans warm-started from the artifact store
+    artifacts_written: int = 0  #: artifact-store writes that completed
+    artifact_errors: int = 0   #: artifacts rejected or failed writes
+    recovered_tracks: int = 0  #: OnlineReanalysis sessions rebuilt via recover()
+    replayed_deltas: int = 0   #: journal delta records replayed by recover()
+    quarantined: int = 0       #: malformed monitoring deltas dropped by ingest
+    #: quarantine-reason census (reason -> delta count), service-cumulative
+    quarantine_reasons: dict = field(default_factory=dict)
     latencies_s: deque = field(default_factory=lambda: deque(maxlen=4096))
 
     def latency_quantiles(self, qs: Sequence[float] = (0.5, 0.99)
-                          ) -> tuple[float, ...]:
-        """Request latencies (submit -> result) at the given quantiles."""
+                          ) -> "tuple[float | None, ...]":
+        """Request latencies (submit -> result) at the given quantiles.
+
+        An empty window (no completed requests yet) reports ``None`` per
+        quantile — explicit "no data", instead of NaNs that poison
+        downstream arithmetic and comparisons silently.
+        """
         if not self.latencies_s:
-            return tuple(float("nan") for _ in qs)
+            return tuple(None for _ in qs)
         arr = np.asarray(self.latencies_s)
         return tuple(float(np.quantile(arr, q)) for q in qs)
 
@@ -208,6 +224,11 @@ class ServiceStats:
         self.degraded += rows
         self.degrade_reasons[reason] = \
             self.degrade_reasons.get(reason, 0) + rows
+
+    def count_quarantined(self, reason: str) -> None:
+        self.quarantined += 1
+        self.quarantine_reasons[reason] = \
+            self.quarantine_reasons.get(reason, 0) + 1
 
     def snapshot(self) -> dict:
         """A point-in-time dict of every counter (caller holds the service
@@ -232,6 +253,14 @@ class ServiceStats:
             "shed": self.shed,
             "deadline_expired": self.deadline_expired,
             "top_degrade_reasons": top,
+            "warm_plans": self.warm_plans,
+            "artifacts_written": self.artifacts_written,
+            "artifact_errors": self.artifact_errors,
+            "recovered_tracks": self.recovered_tracks,
+            "replayed_deltas": self.replayed_deltas,
+            "quarantined": self.quarantined,
+            "top_quarantine_reasons": sorted(
+                self.quarantine_reasons.items(), key=lambda kv: -kv[1])[:3],
             "latency_p50_s": p50, "latency_p99_s": p99,
         }
 
@@ -278,6 +307,15 @@ class AnalysisService:
       from the seeded generator, so retry timing is reproducible),
     * ``faults`` — a :class:`~repro.analysis.faults.FaultPlan` test hook
       injecting deterministic failures into the worker loop.
+
+    Durability: ``store`` (an
+    :class:`~repro.analysis.artifacts.ArtifactStore` or a directory path)
+    makes compiled state survive the process.  Plans are persisted as AOT
+    artifacts on first compile (and re-persisted when their engine learns
+    new call shapes), the plan cache warm-starts from disk before the
+    worker runs, and :meth:`track` sessions given a ``track_id`` journal
+    every ingested delta so :meth:`recover` can rebuild them bit-identically
+    after a crash.
     """
 
     def __init__(self, workflow: Workflow | CompiledWorkflow | None = None, *,
@@ -285,7 +323,8 @@ class AnalysisService:
                  linger_s: float = 0.0, pad_pow2: bool = True,
                  autostart: bool = True, max_pending: int | None = 10_000,
                  max_retries: int = 2, retry_backoff_s: float = 0.002,
-                 retry_seed: int = 0, faults: FaultPlan | None = None):
+                 retry_seed: int = 0, faults: FaultPlan | None = None,
+                 store: "ArtifactStore | str | Path | None" = None):
         self.backend = backend
         self.max_batch = int(max_batch)
         self.linger_s = float(linger_s)
@@ -295,15 +334,28 @@ class AnalysisService:
         self.retry_backoff_s = float(retry_backoff_s)
         self._retry_rng = np.random.default_rng(retry_seed)
         self._faults = faults
+        if store is not None and not isinstance(store, ArtifactStore):
+            store = ArtifactStore(store)
+        if store is not None and store.faults is None:
+            store.faults = faults
+        self.store: ArtifactStore | None = store
         self.stats = ServiceStats()
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
+        self._persist_lock = threading.Lock()
+        #: fingerprint -> engine census at the last successful artifact
+        #: write, so persists are idempotent until the engine learns more
+        self._persisted: dict[tuple, tuple] = {}
+        self._plan_keys: dict[int, tuple] = {}  # id(plan) -> fingerprint
+        self._warmed = False
         self._queue: list[_Request] = []
         self._inflight: list[_Request] = []   # worker-thread only
         self._plans: dict[tuple, CompiledWorkflow] = {}
         self._engines: dict[tuple, Any] = {}
         self._closed = False
         self._thread: threading.Thread | None = None
+        if store is not None:
+            self._warm_start()
         self._default_plan: CompiledWorkflow | None = (
             self.compile(workflow) if workflow is not None else None)
         if autostart:
@@ -311,7 +363,12 @@ class AnalysisService:
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "AnalysisService":
-        """Start the worker (idempotent); queued requests drain immediately."""
+        """Start the worker (idempotent); queued requests drain immediately.
+
+        With a ``store``, the plan cache is warm-started from disk before
+        the worker serves anything (also idempotent — construction already
+        warmed it)."""
+        self._warm_start()
         with self._lock:
             if self._closed:
                 raise ServiceClosed("AnalysisService is closed")
@@ -320,6 +377,39 @@ class AnalysisService:
                     target=self._worker, name="analysis-service", daemon=True)
                 self._thread.start()
         return self
+
+    def _warm_start(self) -> None:
+        """Load every artifact in the store into the plan cache (once).
+
+        A rejected artifact (corrupt, stale format, wrong fingerprint) is
+        skipped with one :class:`ArtifactWarning` and counted — the plan
+        simply cold-compiles on first use.  Never raises.
+        """
+        if self.store is None or self._warmed:
+            return
+        self._warmed = True
+        for path in self.store.scan():
+            try:
+                plan = load_plan(path)
+            except ArtifactError as e:
+                warnings.warn(
+                    f"artifact store: skipping {path.name}: {e} (the plan "
+                    "will cold-compile on first use)", ArtifactWarning,
+                    stacklevel=2)
+                with self._lock:
+                    self.stats.artifact_errors += 1
+                continue
+            key = workflow_fingerprint(plan.workflow)
+            with self._lock:
+                if key in self._plans:
+                    continue
+                self._adopt(plan)
+                self._plans[key] = plan
+                self._plan_keys[id(plan)] = key
+                self.stats.warm_plans += 1
+            # record the as-loaded census: a warm plan re-persists only
+            # when its engine later learns NEW shapes or caps
+            self._persisted[key] = self._engine_census(plan)
 
     def close(self, drain: bool = True) -> None:
         """Stop accepting requests, join the worker, strand NO future.
@@ -374,6 +464,11 @@ class AnalysisService:
         if isinstance(workflow, CompiledWorkflow):
             with self._lock:
                 self._adopt(workflow)
+            if self.store is not None:
+                key = self._key_of(workflow)
+                with self._lock:
+                    self._plans.setdefault(key, workflow)
+                self._persist(key, workflow)
             return workflow
         key = workflow_fingerprint(workflow)
         with self._lock:
@@ -390,6 +485,8 @@ class AnalysisService:
             self.stats.plan_misses += 1
             self._adopt(plan)
             self._plans[key] = plan
+            self._plan_keys[id(plan)] = key
+        self._persist(key, plan)
         return plan
 
     def _adopt(self, plan: CompiledWorkflow) -> None:
@@ -405,6 +502,62 @@ class AnalysisService:
             plan._jax_engine = engine
             self.stats.trace_hits += 1
         # plan already carries its own warm engine: keep it
+
+    # -- durable store ------------------------------------------------------
+    def _key_of(self, plan: CompiledWorkflow) -> tuple:
+        key = self._plan_keys.get(id(plan))
+        if key is None:
+            key = workflow_fingerprint(plan.workflow)
+            self._plan_keys[id(plan)] = key
+        return key
+
+    @staticmethod
+    def _engine_census(plan: CompiledWorkflow) -> tuple:
+        """What the plan's engine has learned (call shapes + proven caps) —
+        persisting is a no-op while this is unchanged."""
+        eng = plan._jax_engine
+        if eng is None:
+            return ()
+        shapes = tuple(sorted((k, tuple(sorted(sigs)))
+                              for k, sigs in
+                              getattr(eng, "_call_shapes", {}).items()))
+        caps = tuple(sorted(getattr(eng, "_proven_caps", {}).items()))
+        return (shapes, caps)
+
+    def _persist(self, key: tuple, plan: CompiledWorkflow) -> None:
+        """(Re-)write the plan's artifact if its engine learned anything new
+        since the last write.  A failed write warns + counts, never raises
+        — durability degrades, serving does not."""
+        if self.store is None:
+            return
+        with self._persist_lock:
+            census = self._engine_census(plan)
+            if self._persisted.get(key) == census:
+                return
+            try:
+                self.store.put(plan)
+            except Exception as e:  # noqa: BLE001 — disk trouble must not
+                warnings.warn(       # take down the serving path
+                    f"artifact store: failed to persist plan: {e!r}",
+                    ArtifactWarning, stacklevel=2)
+                with self._lock:
+                    self.stats.artifact_errors += 1
+                return
+            self._persisted[key] = census
+        with self._lock:
+            self.stats.artifacts_written += 1
+
+    def _persist_batch_plans(self, batch: list["_Request"]) -> None:
+        """After a drain: re-persist any plan whose engine traced new call
+        shapes or ratcheted a proven cap during this batch."""
+        if self.store is None:
+            return
+        seen: set[int] = set()
+        for req in batch:
+            if id(req.plan) in seen:
+                continue
+            seen.add(id(req.plan))
+            self._persist(self._key_of(req.plan), req.plan)
 
     def _resolve_plan(self, plan: CompiledWorkflow | None,
                       workflow: Workflow | None) -> CompiledWorkflow:
@@ -627,15 +780,91 @@ class AnalysisService:
                               max_batch=max_batch).result(timeout)
 
     def track(self, scenarios: Any, *, plan: CompiledWorkflow | None = None,
-              workflow: Workflow | None = None) -> "OnlineReanalysis":
-        """An :class:`OnlineReanalysis` session routed through this service."""
+              workflow: Workflow | None = None,
+              track_id: str | None = None) -> "OnlineReanalysis":
+        """An :class:`OnlineReanalysis` session routed through this service.
+
+        With ``track_id`` (needs a ``store``) every ingested delta is
+        journaled write-ahead, making the session crash-recoverable:
+        :meth:`recover` rebuilds its live state bit-identically after a
+        process death.  Reusing a ``track_id`` resumes its journal.
+        """
         plan = self._resolve_plan(plan, workflow)
-        return OnlineReanalysis(plan, scenarios, service=self)
+        journal = None
+        if track_id is not None:
+            from .journal import Journal
+
+            journal = Journal(self._journal_path(track_id),
+                              faults=self._faults)
+        return OnlineReanalysis(plan, scenarios, service=self,
+                                journal=journal, track_id=track_id)
+
+    def _journal_path(self, track_id: str) -> Path:
+        if self.store is None:
+            raise ValueError(
+                "track_id journaling needs a persistent store: construct "
+                "the service with AnalysisService(store=<dir>)")
+        tid = str(track_id)
+        if not tid or tid in (".", "..") or any(c in tid for c in "/\\\0"):
+            raise ValueError(f"invalid track_id {track_id!r}")
+        return self.store.journal_dir() / (tid + ".journal")
+
+    def recover(self, track_id: str) -> "OnlineReanalysis":
+        """Rebuild a journaled :class:`OnlineReanalysis` session after a
+        crash — bit-identical live state, no sweeping.
+
+        Reads the track's journal (truncating any torn tail with a
+        :class:`~repro.analysis.journal.JournalWarning`), recompiles the
+        genesis workflow through the plan cache (a warm-started artifact
+        makes this trace-free), and replays every intact delta through the
+        same ``ScenarioPack.override`` path the live ingests took.  The
+        returned session appends to the same journal, so recovery composes.
+        Call :meth:`OnlineReanalysis.refresh` for a fresh report.
+        """
+        from .artifacts import fingerprint_digest
+        from .journal import Journal, JournalError, recover_journal
+
+        path = self._journal_path(track_id)
+        records, _torn = recover_journal(path)
+        if not records or not (isinstance(records[0], dict)
+                               and records[0].get("kind") == "genesis"):
+            raise JournalError(
+                f"journal for track {track_id!r} has no intact genesis "
+                "record; the session cannot be recovered")
+        genesis = records[0]
+        if genesis.get("fingerprint") != fingerprint_digest(
+                genesis["workflow"]):
+            raise JournalError(
+                f"journal for track {track_id!r}: genesis fingerprint "
+                "mismatch (journal does not match its workflow)")
+        plan = self.compile(genesis["workflow"])
+        live = OnlineReanalysis(plan, list(genesis["scenarios"]),
+                                service=self,
+                                journal=Journal(path, faults=self._faults),
+                                track_id=track_id)
+        replayed = 0
+        for rec in records[1:]:
+            if isinstance(rec, dict) and rec.get("kind") == "delta":
+                live.pack = live.pack.override(rec["deltas"])
+                replayed += 1
+        live.updates = replayed
+        with self._lock:
+            self.stats.recovered_tracks += 1
+            self.stats.replayed_deltas += replayed
+        return live
 
     def snapshot(self) -> dict:
-        """A consistent point-in-time copy of the service counters."""
+        """A consistent point-in-time copy of the service counters, plus
+        the warm/cold engine census: ``warm_hits`` (solves served by AOT
+        executables from artifacts) vs ``cold_traces`` (XLA traces this
+        process actually paid, including artifact exports)."""
         with self._lock:
-            return self.stats.snapshot()
+            snap = self.stats.snapshot()
+            engines = list(self._engines.values())
+        snap["warm_hits"] = sum(getattr(e, "aot_hits", 0) for e in engines)
+        snap["cold_traces"] = sum(getattr(e, "trace_count", 0)
+                                  for e in engines)
+        return snap
 
     # -- worker -------------------------------------------------------------
     def _worker(self) -> None:
@@ -723,6 +952,7 @@ class AnalysisService:
                 width += len(req.scenarios)
             if chunk:
                 self._sweep_chunk(plan, chunk)
+        self._persist_batch_plans(live)
 
     def _expire(self, req: _Request) -> None:
         with self._lock:
@@ -911,6 +1141,53 @@ class AnalysisService:
             req.future.set_result(rep)
 
 
+class MalformedDeltaWarning(UserWarning):
+    """:meth:`OnlineReanalysis.ingest` quarantined a malformed monitoring
+    delta (NaN/non-finite value, or a non-monotone measured-progress/data
+    PPoly) instead of letting it poison the pack."""
+
+
+def _delta_problem(plan: CompiledWorkflow, rawkey: Any, value: Any
+                   ) -> str | None:
+    """Why this monitoring delta must be quarantined, or None if clean.
+
+    Only *value* malformations are judged here (NaN scalars, non-finite
+    PPoly coefficients, non-monotone data/measured-progress functions);
+    unknown processes/inputs keep raising ``override()``'s typed errors.
+    """
+    from .scenarios import parse_key
+
+    try:
+        proc, name = parse_key(rawkey)
+        p = plan.workflow.processes[proc]
+        is_res = name in p.resources
+        if not is_res and name not in p.data:
+            return None
+    except Exception:  # noqa: BLE001 — malformed KEYS stay override()'s job
+        return None
+    is_scalar = (np.isscalar(value) or isinstance(value, np.generic)
+                 or (isinstance(value, np.ndarray) and value.ndim == 0))
+    values = [value] if (isinstance(value, PPoly) or is_scalar) \
+        else list(value)
+    for v in values:
+        if isinstance(v, PPoly):
+            if not (np.all(np.isfinite(v.starts))
+                    and np.all(np.isfinite(v.coeffs))):
+                return (f"{proc}.{name}: non-finite PPoly coefficients")
+            # cumulative data/progress inputs must not run backwards;
+            # resource rates may legitimately ramp down
+            if not is_res and not v.is_monotone_nondecreasing():
+                return (f"{proc}.{name}: non-monotone measured progress")
+        else:
+            try:
+                x = float(np.asarray(v))
+            except Exception:  # noqa: BLE001 — not a value problem
+                return None
+            if not np.isfinite(x):
+                return f"{proc}.{name}: non-finite scalar"
+    return None
+
+
 class OnlineReanalysis:
     """Live-run tracking: override-driven re-sweeps of one prepared pack.
 
@@ -926,11 +1203,19 @@ class OnlineReanalysis:
 
     With a ``service``, re-sweeps run on the service worker (serialized
     with the coalesced traffic); standalone sessions sweep inline.
+
+    With a ``journal`` (`svc.track(..., track_id=...)`), deltas are
+    appended write-ahead — checksummed and fsynced BEFORE they touch the
+    pack — so ``svc.recover(track_id)`` rebuilds the live state
+    bit-identically after a crash.  The journal's first record is a
+    *genesis* snapshot (workflow + resolved scenarios), written only when
+    the journal is empty, making recovery self-contained.
     """
 
     def __init__(self, plan: CompiledWorkflow, scenarios: Any, *,
                  backend: str = "auto",
-                 service: AnalysisService | None = None):
+                 service: AnalysisService | None = None,
+                 journal: Any = None, track_id: str | None = None):
         self.plan = plan
         self._backend = backend
         self._service = service
@@ -942,12 +1227,40 @@ class OnlineReanalysis:
             self.pack = plan.prepare(list(scenarios))
         self.updates = 0
         self.report: Report | None = None
+        self.track_id = track_id
+        self.quarantined = 0
+        self._journal = None
+        if journal is not None:
+            from .artifacts import fingerprint_digest
+            from .journal import Journal
+
+            self._journal = journal if isinstance(journal, Journal) \
+                else Journal(journal)
+            if self._journal.n_records == 0:
+                self._journal.append({
+                    "kind": "genesis", "format": 1, "track_id": track_id,
+                    "workflow": plan.workflow,
+                    "scenarios": list(self.pack.scenarios),
+                    "fingerprint": fingerprint_digest(plan.workflow)})
 
     def ingest(self, deltas: Mapping[Any, Any] | None = None, *,
                timeout: float | None = None) -> Report:
         """Apply monitoring deltas (may be ``None`` for a plain refresh),
-        re-sweep, and return the fresh :class:`Report`."""
+        re-sweep, and return the fresh :class:`Report`.
+
+        Malformed deltas — NaN/non-finite values, non-monotone
+        measured-progress PPolys — are *quarantined*: dropped with one
+        :class:`MalformedDeltaWarning` and censused
+        (``self.quarantined`` / ``ServiceStats.quarantined``) while
+        well-formed deltas in the same call still apply.  Surviving deltas
+        are journaled (when tracking durably) BEFORE they touch the pack.
+        """
         if deltas:
+            deltas = self._quarantine(dict(deltas))
+        if deltas:
+            if self._journal is not None:
+                self._journal.append({"kind": "delta",
+                                      "deltas": dict(deltas)})
             self.pack = self.pack.override(deltas)
         if self._service is not None:
             self.report = self._service.submit_pack(self.pack).result(timeout)
@@ -955,6 +1268,29 @@ class OnlineReanalysis:
             self.report = self.plan.sweep(self.pack, backend=self._backend)
         self.updates += 1
         return self.report
+
+    def _quarantine(self, deltas: dict) -> dict:
+        bad: dict[Any, str] = {}
+        for k, v in deltas.items():
+            why = _delta_problem(self.plan, k, v)
+            if why is not None:
+                bad[k] = why
+        if not bad:
+            return deltas
+        for k in bad:
+            deltas.pop(k)
+        reasons = sorted(set(bad.values()))
+        warnings.warn(
+            f"online re-analysis: quarantined {len(bad)} malformed "
+            f"monitoring delta(s) [{'; '.join(reasons)}]; the pack keeps "
+            "its previous state for those inputs",
+            MalformedDeltaWarning, stacklevel=3)
+        self.quarantined += len(bad)
+        if self._service is not None:
+            with self._service._lock:
+                for why in bad.values():
+                    self._service.stats.count_quarantined(why)
+        return deltas
 
     def refresh(self) -> Report:
         """Re-sweep the current pack without new deltas."""

@@ -48,6 +48,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="run the Monte Carlo distribution-query phase")
     ap.add_argument("--mc-draws", type=int, default=2048,
                     help="Monte Carlo draws in the --mc phase")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="artifact-store directory: compiled plans persist "
+                         "as durable AOT artifacts and warm-start the plan "
+                         "cache on the next launch (see "
+                         "repro.analysis.artifacts)")
     return ap
 
 
@@ -157,7 +162,8 @@ def main(argv: list[str] | None = None) -> None:
     from repro.configs.paper_workflow import build_workflow
 
     args = build_parser().parse_args(argv)
-    svc = AnalysisService(backend=args.backend, linger_s=args.linger_ms / 1e3)
+    svc = AnalysisService(backend=args.backend, linger_s=args.linger_ms / 1e3,
+                          store=args.store)
     try:
         plan = svc.compile(build_workflow(0.5))
         _load_phase(svc, plan, args.clients, args.queries)
@@ -168,6 +174,10 @@ def main(argv: list[str] | None = None) -> None:
         print(f"[analyze] totals: requests={snap['requests']} "
               f"scenarios={snap['scenarios']} sweeps={snap['sweeps']} "
               f"plan_cache={snap['plan_hits']}h/{snap['plan_misses']}m")
+        print(f"[analyze] durability: warm_plans={snap['warm_plans']} "
+              f"aot_hits={snap['warm_hits']} cold_traces={snap['cold_traces']} "
+              f"artifacts_written={snap['artifacts_written']} "
+              f"artifact_errors={snap['artifact_errors']}")
     except KeyboardInterrupt:
         # graceful shutdown: cancel everything queued (clients see their
         # futures cancelled and stop), print what was served, exit 130 —

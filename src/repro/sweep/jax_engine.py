@@ -1051,6 +1051,22 @@ class JaxSweepEngine:
         #: re-sweeps skip the overflow ladder without one deep workload
         #: ratcheting the budget (and the record-buffer tax) for all shapes
         self._proven_caps: dict = {}
+        #: XLA traces actually paid by this process: the counter increments
+        #: INSIDE the traced body of ``run`` (Python runs only on a jit or
+        #: export cache miss), so it is ground truth for the "warm start =
+        #: zero new traces" pin
+        self.trace_count = 0
+        #: solves served by an AOT executable adopted from a plan artifact
+        self.aot_hits = 0
+        #: call-signature census per (B, shards, iter_cap, ramps): the input
+        #: aval pytrees actually solved, recorded so :meth:`export_entries`
+        #: AOT-serializes exactly the executables a warm start will need
+        self._call_shapes: dict = {}
+        #: adopted AOT executables: (B, shards, iter_cap, ramps) -> {sig: call}
+        self._aot: dict = {}
+        #: the raw serialized blobs the adopted executables came from, kept
+        #: so a re-export of this engine does not drop them
+        self._aot_blobs: list = []
 
     # -- trace construction -------------------------------------------------
     def _make_run(self, B: int, iter_cap: int, ramps: bool):
@@ -1058,6 +1074,7 @@ class JaxSweepEngine:
         arity = 4 if ramps else 3
 
         def run(largs):
+            self.trace_count += 1
             finish_by, progress_by, out = {}, {}, {}
             solved = []                 # (level, t0, result) in level order
             overflow = jnp.zeros((), bool)
@@ -1398,7 +1415,10 @@ class JaxSweepEngine:
         first = pkey not in self._proven_caps
         cap = self._proven_caps.get(pkey, self.iter_cap)
         while True:
-            fn = self._get_compiled(Bp, shards, cap, ramps)
+            fn = self._lookup_aot(Bp, shards, cap, ramps, dev)
+            if fn is None:
+                self._record_call(Bp, shards, cap, ramps, dev)
+                fn = self._get_compiled(Bp, shards, cap, ramps)
             out = fn(dev)
             if not bool(np.asarray(out["__overflow__"]).any()):
                 break
@@ -1460,6 +1480,106 @@ class JaxSweepEngine:
                 factor_kinds=kinds, factor_names=names, share_seconds=share,
                 iterations=int(np.asarray(r["iterations"]).max()))
         return results
+
+    # -- AOT export / adopt (durable plan artifacts) ------------------------
+    def _lookup_aot(self, B: int, shards: int, cap: int, ramps: bool, dev):
+        """An adopted AOT executable matching this exact call, or None."""
+        entries = self._aot.get((B, shards, cap, ramps))
+        if not entries:
+            return None
+        call = entries.get(_aval_sig(dev))
+        if call is not None:
+            self.aot_hits += 1
+        return call
+
+    def _record_call(self, B: int, shards: int, cap: int, ramps: bool,
+                     dev) -> None:
+        """Census the input avals of a jit call so export can AOT it.
+
+        pmap executables (shards > 1) are not exportable — sharded solves
+        stay on the jit path and a warm start re-traces them.
+        """
+        if shards != 1:
+            return
+        sigs = self._call_shapes.setdefault((B, shards, cap, ramps), {})
+        sig = _aval_sig(dev)
+        if sig not in sigs:
+            sigs[sig] = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), dev)
+
+    def export_entries(self) -> list[dict]:
+        """AOT-serialize (``jax.export``) every recorded single-device call
+        signature; previously adopted blobs are carried forward so a
+        re-export never loses executables this engine did not itself trace.
+
+        Each entry: ``{"B", "iter_cap", "ramps", "sig", "blob"}``.
+        """
+        from jax import export as jax_export
+
+        entries = list(self._aot_blobs)
+        have = {(e["B"], 1, e["iter_cap"], e["ramps"], _canon_sig(e["sig"]))
+                for e in entries}
+        for key in sorted(self._call_shapes):
+            B, _shards, cap, ramps = key
+            # a first solve records its call at the pre-ratchet budget; warm
+            # solves start at the PROVEN cap, so that is the cap to export
+            cap = self._proven_caps.get((B, _shards, ramps), cap)
+            for sig, shapes in sorted(self._call_shapes[key].items()):
+                if (B, 1, cap, ramps, sig) in have:
+                    continue
+                have.add((B, 1, cap, ramps, sig))
+                exported = jax_export.export(
+                    jax.jit(self._make_run(B, cap, ramps)))(shapes)
+                entries.append({"B": int(B), "iter_cap": int(cap),
+                                "ramps": bool(ramps), "sig": sig,
+                                "blob": exported.serialize()})
+        return entries
+
+    def adopt_exported(self, entries: list) -> int:
+        """Deserialize artifact entries into the AOT registry; returns how
+        many executables were adopted.  Solves whose (B, iter_cap, ramps,
+        aval signature) match run the stored program — zero new traces."""
+        from jax import export as jax_export
+
+        adopted = 0
+        for e in entries:
+            exported = jax_export.deserialize(e["blob"])
+            key = (int(e["B"]), 1, int(e["iter_cap"]), bool(e["ramps"]))
+            self._aot.setdefault(key, {})[_canon_sig(e["sig"])] = exported.call
+            self._aot_blobs.append(e)
+            adopted += 1
+        return adopted
+
+    def proven_caps_rows(self) -> list[tuple]:
+        """Proven iteration budgets as portable rows (B, shards, ramps, cap)
+        for the artifact manifest."""
+        return [(int(B), int(sh), bool(r), int(cap))
+                for (B, sh, r), cap in sorted(self._proven_caps.items())]
+
+    def adopt_proven_caps(self, rows) -> None:
+        """Install manifest cap rows so warm solves start at the proven
+        budget (``first=False``: no second down-ratchet recompile)."""
+        for B, sh, r, cap in rows:
+            self._proven_caps.setdefault((int(B), int(sh), bool(r)), int(cap))
+
+
+def _aval_sig(tree) -> tuple:
+    """Hashable (treedef, leaf shape/dtype) signature of an input pytree —
+    exactly what jit specializes on, so also the AOT-executable match key.
+    Works on concrete arrays and on ``jax.ShapeDtypeStruct`` trees."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (str(treedef),
+            tuple((tuple(int(d) for d in leaf.shape), str(leaf.dtype))
+                  for leaf in leaves))
+
+
+def _canon_sig(sig) -> tuple:
+    """Re-canonicalize a signature that round-tripped through an artifact
+    (tuples may have become lists)."""
+    treedef, leaves = sig
+    return (str(treedef),
+            tuple((tuple(int(d) for d in shape), str(dtype))
+                  for shape, dtype in leaves))
 
 
 # ---------------------------------------------------------------------------

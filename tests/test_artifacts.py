@@ -1,0 +1,319 @@
+"""Durable AOT plan artifacts (ISSUE 10): export/load without re-tracing.
+
+Contracts under test:
+
+* **warm start is real**: ``load_plan`` sweeps are bit-identical to a fresh
+  ``compile()`` on the paper workflow with ZERO new XLA traces — pinned by
+  the engine's ``trace_count`` (incremented inside the traced body, so it
+  counts actual trace executions) and ``aot_hits``,
+* **every verification failure degrades, never crashes**: corrupt bytes,
+  a flipped member digest, a stale/future format stamp, a truncated file,
+  and garbage all raise the typed ``ArtifactError`` from a bare load and
+  fall back to a logged re-compile when a fallback workflow is given,
+* **portability**: an artifact exported under the default x64 mode loads
+  cleanly in a like process; a 4-host-device process (different platform
+  topology, same platform string) still sweeps bit-identically (subprocess
+  tests, since jax fixes both at init),
+* **atomic writes**: ``ArtifactStore.put`` leaves either the complete
+  artifact or nothing under the final name, and deterministic ``FaultPlan``
+  hooks (corrupt_artifact / stale_artifact_version) produce artifacts the
+  loader provably rejects.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import subprocess
+import sys
+import warnings
+import zipfile
+
+import numpy as np
+import pytest
+
+from repro.analysis import (ArtifactError, ArtifactStore, ArtifactWarning,
+                            FaultPlan, load_plan)
+from repro.analysis.artifacts import ARTIFACT_FORMAT, build_artifact_bytes
+from repro.configs.paper_workflow import build_workflow, sweep_scenarios
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FRACS = [0.3, 0.5, 0.7, 0.9]
+
+
+def _swept_plan():
+    """A fresh plan that has swept once (so it has engines to export)."""
+    plan = build_workflow(0.5).compile()
+    pack = plan.prepare(sweep_scenarios(FRACS))
+    rep = plan.sweep(pack, backend="jax")
+    return plan, rep
+
+
+# -------------------------------------------------------- the tentpole pin --
+def test_export_load_bit_identical_zero_traces(tmp_path):
+    plan, rep = _swept_plan()
+    path = plan.export(tmp_path / "paper.bmplan")
+    assert path.exists()
+
+    loaded = load_plan(path)
+    eng = loaded._jax_engine
+    assert eng is not None and eng is not plan._jax_engine
+    rep2 = loaded.sweep(loaded.prepare(sweep_scenarios(FRACS)),
+                        backend="jax")
+    # ZERO new XLA traces and at least one AOT-served solve
+    assert eng.trace_count == 0, "warm sweep re-traced"
+    assert eng.aot_hits >= 1
+    np.testing.assert_array_equal(rep.makespans, rep2.makespans)
+    np.testing.assert_array_equal(rep.share_seconds, rep2.share_seconds)
+    for n in rep.order:
+        np.testing.assert_array_equal(rep.finish[n], rep2.finish[n])
+
+    # ...and bit-identical to a second INDEPENDENT fresh compile too
+    fresh = build_workflow(0.5).compile()
+    rep3 = fresh.sweep(fresh.prepare(sweep_scenarios(FRACS)), backend="jax")
+    np.testing.assert_array_equal(rep2.makespans, rep3.makespans)
+
+
+def test_export_before_any_sweep_loads_and_retraces(tmp_path):
+    """A never-swept plan exports a valid (engine-less) artifact; loading it
+    works and the first sweep simply traces."""
+    plan = build_workflow(0.5).compile()
+    path = plan.export(tmp_path / "cold.bmplan")
+    loaded = load_plan(path)
+    rep = loaded.sweep(loaded.prepare(sweep_scenarios(FRACS)), backend="jax")
+    assert loaded._jax_engine.trace_count >= 1
+    ref = plan.sweep(plan.prepare(sweep_scenarios(FRACS)), backend="jax")
+    np.testing.assert_array_equal(rep.makespans, ref.makespans)
+
+
+def test_artifact_bytes_deterministic():
+    plan, _rep = _swept_plan()
+    assert build_artifact_bytes(plan) == build_artifact_bytes(plan)
+
+
+# ------------------------------------------------- degrade, never crash ----
+def _corrupt_tail(path):
+    """Flip the artifact's final bytes (zip central directory): the
+    container provably stops being readable."""
+    data = path.read_bytes()
+    path.write_bytes(data[:-64] + bytes(b ^ 0xFF for b in data[-64:]))
+
+
+def test_corrupt_bytes_rejected_then_fallback(tmp_path):
+    plan, rep = _swept_plan()
+    path = plan.export(tmp_path / "x.bmplan")
+    _corrupt_tail(path)
+    with pytest.raises(ArtifactError):
+        load_plan(path)
+    # with a fallback workflow: one typed warning, fresh compile, right answer
+    with pytest.warns(ArtifactWarning, match="fresh compile"):
+        loaded = load_plan(path, workflow=build_workflow(0.5))
+    rep2 = loaded.sweep(loaded.prepare(sweep_scenarios(FRACS)),
+                        backend="jax")
+    np.testing.assert_array_equal(rep.makespans, rep2.makespans)
+    # strict=True propagates even with a fallback
+    with pytest.raises(ArtifactError):
+        load_plan(path, workflow=build_workflow(0.5), strict=True)
+
+
+def test_truncated_and_garbage_files_rejected(tmp_path):
+    plan, _rep = _swept_plan()
+    path = plan.export(tmp_path / "x.bmplan")
+    trunc = tmp_path / "trunc.bmplan"
+    trunc.write_bytes(path.read_bytes()[: path.stat().st_size // 3])
+    with pytest.raises(ArtifactError):
+        load_plan(trunc)
+    garbage = tmp_path / "garbage.bmplan"
+    garbage.write_bytes(b"not an artifact at all")
+    with pytest.raises(ArtifactError):
+        load_plan(garbage)
+    with pytest.raises(ArtifactError):
+        load_plan(tmp_path / "missing.bmplan")
+
+
+def test_stale_format_version_rejected_typed(tmp_path):
+    plan, _rep = _swept_plan()
+    store = ArtifactStore(tmp_path / "store",
+                          faults=FaultPlan(stale_artifact_version=1))
+    path = store.put(plan)
+    with pytest.raises(ArtifactError, match="format"):
+        load_plan(path)
+    # the very next write is clean (1-based deterministic schedule)
+    path2 = store.put(plan)
+    assert load_plan(path2) is not None
+
+
+def test_faultplan_corrupt_artifact_write_degrades(tmp_path):
+    """The injected mid-file flip lands in SOME member; the contract is
+    'degrade, never crash or silently serve garbage': either a typed reject
+    or a loaded plan whose engines were skipped (warned) and whose sweep
+    re-traces to the exact fresh-compile answer."""
+    plan, rep = _swept_plan()
+    store = ArtifactStore(tmp_path / "store",
+                          faults=FaultPlan(corrupt_artifact=1))
+    path = store.put(plan)
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            loaded = load_plan(path)
+    except ArtifactError:
+        return  # typed reject: the stronger outcome
+    assert any(issubclass(x.category, ArtifactWarning) for x in w), \
+        "corrupt artifact loaded without a warning"
+    rep2 = loaded.sweep(loaded.prepare(sweep_scenarios(FRACS)),
+                        backend="jax")
+    np.testing.assert_array_equal(rep.makespans, rep2.makespans)
+
+
+def test_wrong_workflow_member_fails_fingerprint(tmp_path):
+    """A manifest whose fingerprint does not match the stored workflow is a
+    typed error (tamper/mixup detection), not a silent wrong plan."""
+    plan, _rep = _swept_plan()
+    path = plan.export(tmp_path / "x.bmplan")
+    import json
+
+    with zipfile.ZipFile(path) as zf:
+        manifest = json.loads(zf.read("manifest.json"))
+        members = {n: zf.read(n) for n in zf.namelist()}
+    # swap in a different workflow but keep (and re-seal) the manifest
+    other = pickle.dumps(build_workflow(0.9), protocol=4)
+    import hashlib
+
+    manifest["members"]["workflow.pkl"] = hashlib.sha256(other).hexdigest()
+    core = {k: v for k, v in manifest.items() if k != "content_hash"}
+    manifest["content_hash"] = hashlib.sha256(
+        json.dumps(core, sort_keys=True).encode()).hexdigest()
+    members["workflow.pkl"] = other
+    members["manifest.json"] = json.dumps(manifest, sort_keys=True).encode()
+    with zipfile.ZipFile(path, "w") as zf:
+        for n, data in members.items():
+            zf.writestr(n, data)
+    with pytest.raises(ArtifactError, match="fingerprint"):
+        load_plan(path)
+
+
+def test_corrupt_engine_member_still_loads_plan(tmp_path):
+    """Engines are cargo: a bad engine blob degrades to re-trace, the plan
+    itself still loads (warm plan cache beats nothing)."""
+    plan, rep = _swept_plan()
+    path = plan.export(tmp_path / "x.bmplan")
+    import json
+
+    with zipfile.ZipFile(path) as zf:
+        members = {n: zf.read(n) for n in zf.namelist()}
+    manifest = json.loads(members["manifest.json"])
+    bad = b"\x00" * 64
+    import hashlib
+
+    manifest["members"]["engines.pkl"] = hashlib.sha256(bad).hexdigest()
+    core = {k: v for k, v in manifest.items() if k != "content_hash"}
+    manifest["content_hash"] = hashlib.sha256(
+        json.dumps(core, sort_keys=True).encode()).hexdigest()
+    members["engines.pkl"] = bad
+    members["manifest.json"] = json.dumps(manifest, sort_keys=True).encode()
+    with zipfile.ZipFile(path, "w") as zf:
+        for n, data in members.items():
+            zf.writestr(n, data)
+    with pytest.warns(ArtifactWarning, match="re-trace"):
+        loaded = load_plan(path)
+    rep2 = loaded.sweep(loaded.prepare(sweep_scenarios(FRACS)),
+                        backend="jax")
+    assert loaded._jax_engine.trace_count >= 1  # honest cold re-trace
+    np.testing.assert_array_equal(rep.makespans, rep2.makespans)
+
+
+# ------------------------------------------------------------- the store ----
+def test_store_atomic_put_and_scan(tmp_path):
+    plan, _rep = _swept_plan()
+    store = ArtifactStore(tmp_path / "store")
+    p1 = store.put(plan)
+    assert store.scan() == [p1]
+    # re-put overwrites in place (same fingerprint, same path), atomically
+    p2 = store.put(plan)
+    assert p2 == p1 and store.scan() == [p1]
+    assert not list((tmp_path / "store").glob("*.tmp")), "left temp litter"
+    loaded = load_plan(p1)
+    assert loaded.workflow.processes.keys() == plan.workflow.processes.keys()
+
+
+# ------------------------------------------------------------ portability ----
+def test_artifact_x64_flip_degrades_to_retrace_subprocess(tmp_path):
+    """An artifact recorded under x64 must NOT run its AOT engines in a
+    non-x64 process: the plan loads, engines are skipped with the typed
+    warning, and the sweep still re-traces to the right answer."""
+    plan, rep = _swept_plan()
+    path = plan.export(tmp_path / "x64.bmplan")
+    code = f"""
+import json, warnings, zipfile, numpy as np
+# simulate an x64-flipped writer by rewriting the manifest flag: the READING
+# process (this one) enables x64 on engine import, so the mismatch trips
+import hashlib
+path = {str(path)!r}
+with zipfile.ZipFile(path) as zf:
+    members = {{n: zf.read(n) for n in zf.namelist()}}
+manifest = json.loads(members["manifest.json"])
+manifest["x64"] = False
+core = {{k: v for k, v in manifest.items() if k != "content_hash"}}
+manifest["content_hash"] = hashlib.sha256(
+    json.dumps(core, sort_keys=True).encode()).hexdigest()
+members["manifest.json"] = json.dumps(manifest, sort_keys=True).encode()
+with zipfile.ZipFile(path, "w") as zf:
+    for n, data in members.items():
+        zf.writestr(n, data)
+import repro.sweep.jax_engine  # noqa: F401 — flips jax_enable_x64 ON, so the
+# running process provably disagrees with the rewritten manifest flag
+from repro.analysis import ArtifactWarning, load_plan
+from repro.configs.paper_workflow import sweep_scenarios
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    loaded = load_plan(path)
+assert any(issubclass(x.category, ArtifactWarning)
+           and "x64" in str(x.message) for x in w), [str(x.message) for x in w]
+rep = loaded.sweep(loaded.prepare(sweep_scenarios({FRACS!r})), backend="jax")
+assert loaded._jax_engine.trace_count >= 1   # honest re-trace
+assert loaded._jax_engine.aot_hits == 0
+print("MS", repr(rep.makespans.tolist()))
+print("X64-OK")
+"""
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "X64-OK" in out.stdout
+    ms = eval(out.stdout.splitlines()[0][3:])
+    np.testing.assert_array_equal(np.asarray(ms), rep.makespans)
+
+
+def test_artifact_under_four_host_devices_subprocess(tmp_path):
+    """A single-device artifact in a 4-host-device process: unsharded sweeps
+    hit the AOT path bit-identically (platform is still 'cpu'); sharded
+    sweeps fall through to pmap and re-trace — also bit-identically."""
+    plan, rep = _swept_plan()
+    path = plan.export(tmp_path / "dev4.bmplan")
+    code = f"""
+import numpy as np, jax
+assert jax.local_device_count() == 4, jax.local_device_count()
+from repro.analysis import load_plan
+from repro.configs.paper_workflow import sweep_scenarios
+loaded = load_plan({str(path)!r})
+pack = loaded.prepare(sweep_scenarios({FRACS!r}))
+r1 = loaded.sweep(pack, backend="jax")
+eng = loaded._jax_engine
+assert eng.trace_count == 0 and eng.aot_hits >= 1, (eng.trace_count, eng.aot_hits)
+r4 = loaded.sweep(pack.shard(4), backend="jax")
+assert eng.trace_count >= 1   # pmap path is cold by design
+np.testing.assert_array_equal(r1.makespans, r4.makespans)
+print("MS", repr(r1.makespans.tolist()))
+print("DEV4-OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "DEV4-OK" in out.stdout
+    ms = eval(out.stdout.splitlines()[0][3:])
+    np.testing.assert_array_equal(np.asarray(ms), rep.makespans)
